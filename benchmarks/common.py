@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: train small spiking models once, cache their
+spike activations + calibrated patterns for all paper-table benchmarks."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assign import PhiStats, phi_stats
+from repro.core.patterns import PhiConfig, calibrate
+from repro.snn import data as snn_data
+from repro.snn import models as snn_models
+from repro.snn import train as snn_train
+from repro.snn.models import SNNConfig
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "bench_cache")
+CACHE = os.path.abspath(CACHE)
+
+# Paper-side evaluation suite: (model kind, dataset kind) pairs standing in
+# for the paper's {VGG16, ResNet18} × CIFAR and {Spikformer, SDT} × DVS rows.
+SUITE = [
+    ("vgg", "images"),
+    ("resnet", "images"),
+    ("spikformer", "images"),
+    ("spikformer", "events"),
+]
+
+
+def _train_one(kind: str, dataset: str, steps: int = 120, seed: int = 0):
+    if dataset == "events":
+        x, y = snn_data.synthetic_event_frames(768, 10, size=16, timesteps=4, seed=seed)
+    else:
+        x, y = snn_data.synthetic_images(768, 10, size=16, seed=seed)
+    cfg = SNNConfig(kind=kind, widths=(32, 64), dim=96, blocks=2, timesteps=4,
+                    input_size=16, input_channels=x.shape[-1],
+                    phi=PhiConfig(k=16, q=128, iters=12))
+    params, _ = snn_train.train(cfg, x, y, steps=steps, batch=64, log_every=0, seed=seed)
+    acc = snn_train.evaluate(params, cfg, x[:512], y[:512])
+    return cfg, params, (x, y), acc
+
+
+def suite_stats(force: bool = False) -> dict:
+    """{(kind, dataset): {layer: (PhiStats, acts_shape)}, 'acc': float} cached."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, "suite_stats.pkl")
+    if os.path.exists(path) and not force:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    out = {}
+    for kind, dataset in SUITE:
+        t0 = time.time()
+        cfg, params, (x, y), acc = _train_one(kind, dataset)
+        phi, acts = snn_models.calibrate_model(params, cfg, jnp.asarray(x[:96]))
+        layers = {}
+        for name, act in acts.items():
+            layers[name] = (phi_stats(act, phi.patterns[name]), act.shape)
+        out[(kind, dataset)] = {"layers": layers, "acc": acc,
+                                "train_s": time.time() - t0}
+    with open(path, "wb") as f:
+        pickle.dump(out, f)
+    return out
+
+
+def aggregate_stats(layers: dict) -> PhiStats:
+    """Activation-size-weighted aggregate over a model's layers."""
+    tot = sum(float(np.prod(sh)) for _, sh in layers.values())
+    def wavg(field):
+        return sum(getattr(st, field) * float(np.prod(sh)) for st, sh in layers.values()) / tot
+    rows = sum(sh[0] for _, sh in layers.values())
+    return PhiStats(
+        bit_density=wavg("bit_density"), l1_density=wavg("l1_density"),
+        l2_pos_density=wavg("l2_pos_density"), l2_neg_density=wavg("l2_neg_density"),
+        idx_density=wavg("idx_density"), rows=rows,
+        cols=next(iter(layers.values()))[0].cols)
+
+
+def random_matrix_stats(p: float, m: int = 4096, k_total: int = 256,
+                        q: int = 128, seed: int = 42) -> PhiStats:
+    rng = np.random.default_rng(seed)
+    a = (rng.random((m, k_total)) < p).astype(np.float32)
+    pats = calibrate(a, PhiConfig(k=16, q=q, iters=15))
+    return phi_stats(a, pats)

@@ -1,0 +1,64 @@
+"""Paper Fig. 7: design-space exploration — K-tile size, pattern count,
+buffer size vs computation/memory."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.assign import phi_stats
+from repro.core.patterns import PhiConfig, calibrate
+from repro.core.perfmodel import DRAM_BPC, GemmShape, phi_layer, summarize
+
+
+def _acts(seed: int = 0, m: int = 4096, K: int = 288):
+    """Structured binary activations (VGG-like density ~11%)."""
+    rng = np.random.default_rng(seed)
+    protos = (rng.random((24, K)) < 0.11).astype(np.float32)
+    a = protos[rng.integers(0, 24, m)]
+    flip = rng.random((m, K)) < 0.02
+    return np.abs(a - flip).astype(np.float32)
+
+
+def main() -> list[str]:
+    rows = ["fig7,sweep,value,l2_density,l1_density,idx_density,cycles_rel,pwp_bytes_rel"]
+    a = _acts()
+    m, K = a.shape
+    shape = GemmShape(m, K, 512)
+
+    # (a/b) K-tile size sweep at q=128
+    base_cycles = None
+    for k in (8, 16, 32):
+        Kk = (K // k) * k
+        pats = calibrate(a[:, :Kk], PhiConfig(k=k, q=128, iters=10))
+        st = phi_stats(a[:, :Kk], pats)
+        perf = phi_layer(GemmShape(m, Kk, 512), st, k=k)
+        if base_cycles is None:
+            base_cycles = perf.cycles
+        pwp_rel = (Kk / k) * 128 * 512 / (Kk * 512)
+        rows.append(f"fig7,ktile,{k},{st.l2_density:.4f},{st.l1_density:.4f},"
+                    f"{st.idx_density:.4f},{perf.cycles / base_cycles:.3f},{pwp_rel:.2f}")
+
+    # (c) pattern count sweep at k=16
+    for q in (16, 32, 64, 128, 256):
+        pats = calibrate(a, PhiConfig(k=16, q=q, iters=10))
+        st = phi_stats(a, pats)
+        perf = phi_layer(shape, st, q=q)
+        pwp_rel = (K / 16) * q * 512 / (K * 512)
+        rows.append(f"fig7,patterns,{q},{st.l2_density:.4f},{st.l1_density:.4f},"
+                    f"{st.idx_density:.4f},{perf.cycles / base_cycles:.3f},{pwp_rel:.2f}")
+
+    # (d) buffer size vs DRAM traffic: bigger on-chip buffer -> PWP reuse
+    pats = calibrate(a, PhiConfig(k=16, q=128, iters=10))
+    st = phi_stats(a, pats)
+    pwp_total = (K / 16) * 129 * 512  # bytes (int8 PWP entries)
+    for buf_kb in (60, 120, 240, 480, 960):
+        resident = min(1.0, buf_kb * 1024 / pwp_total)
+        refetch = 1.0 + 3.0 * (1.0 - resident)  # m-stripe refetch factor
+        dram = pwp_total * 0.2773 * refetch
+        rows.append(f"fig7,buffer_kb,{buf_kb},{st.l2_density:.4f},,,"
+                    f"{dram / DRAM_BPC:.0f},{resident:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,149 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → record.
+
+Three cells (selection criteria per the assignment):
+  A. yi_34b × train_4k      — most collective-bound baseline (41.6 s vs 6.4 s compute)
+  B. yi_34b × prefill_32k   — worst roofline fraction (MFU 0.038, memory-bound)
+  C. olmo_1b × prefill_32k × phi — most representative of the paper's technique
+
+Each experiment is one tagged dry-run; results append to
+results/hillclimb.json with the hypothesis text + prediction so
+EXPERIMENTS.md §Perf can be generated from the log.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.utils import dump_json, load_json, log  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "hillclimb.json")
+OUT = os.path.abspath(OUT)
+
+EXPERIMENTS = [
+    # ---- Cell A: yi_34b train_4k (collective-bound) -------------------------
+    dict(cell=("yi_34b", "train_4k", False, False), tag="A1_bf16params",
+         hypothesis=("FSDP all-gathers + grad all-reduce move f32 params; "
+                     "bf16 params (+factored 2nd moment) halve weight-side "
+                     "collective bytes: predict collective 41.6→~31s (-25%), "
+                     "memory 28.3→~24s"),
+         cfg=dict(param_dtype=jnp.bfloat16)),
+    dict(cell=("yi_34b", "train_4k", False, False), tag="A2_no_sp",
+         hypothesis=("saved_seq SP shards the residual carry on 'model', "
+                     "adding per-layer seq all-gathers/a2a; dropping it "
+                     "(saved_seq=None) removes ~450GiB gathers: predict "
+                     "collective -30%, memory +20% and temp bytes ~16x carry"),
+         cfg=dict(param_dtype=jnp.bfloat16),
+         rules=dict(shd.TRAIN_RULES, saved_seq=None)),
+    dict(cell=("yi_34b", "train_4k", False, False), tag="A3_dots_remat",
+         hypothesis=("remat='dots' saves matmul outputs, skipping the fwd "
+                     "recompute's FSDP re-gather + TP re-all-reduce: predict "
+                     "collective -20% vs A1, temp memory grows (may exceed HBM)"),
+         cfg=dict(param_dtype=jnp.bfloat16, remat="dots")),
+    # ---- Cell B: yi_34b prefill_32k (memory-bound serve) --------------------
+    dict(cell=("yi_34b", "prefill_32k", False, False), tag="B1_bf16",
+         hypothesis=("serve weights already replicated; param bf16 halves "
+                     "weight reads: predict memory 38→~33s (weights are a "
+                     "small share at 32k — attention dominates)"),
+         cfg=dict(param_dtype=jnp.bfloat16)),
+    dict(cell=("yi_34b", "prefill_32k", False, False), tag="B2_bigblocks",
+         hypothesis=("flash q/kv block 512/1024→1024/2048 quarters the "
+                     "number of block-pairs' mask/stat overhead and halves "
+                     "KV re-reads per q block: predict memory -25%"),
+         cfg=dict(param_dtype=jnp.bfloat16, flash_block_q=1024,
+                  flash_block_kv=2048)),
+    # ---- Cell C: olmo_1b prefill_32k phi (paper's technique) ----------------
+    dict(cell=("olmo_1b", "prefill_32k", False, True), tag="C1_budget3pct",
+         hypothesis=("L2 capacity is the static load-balance budget; paper "
+                     "density ~3%: budget 0.04→0.03 cuts L2 gather/scatter "
+                     "traffic 25%: predict memory -15%"),
+         cfg=None, phi_budget=0.03),
+    dict(cell=("olmo_1b", "prefill_32k", False, True), tag="C2_bigchunks",
+         hypothesis=("chunk_rows 2048→8192 quarters chunk boundaries and "
+                     "L1 scan carry round-trips: predict memory -30%"),
+         cfg=None, env=dict(PHI_CHUNK_ROWS="8192")),
+    # ---- round 2 -------------------------------------------------------------
+    dict(cell=("yi_34b", "prefill_32k", False, False), tag="B3_hugeblocks",
+         hypothesis=("flash blocks 2048/4096: KV stream re-read once per "
+                     "2048-q-block instead of per 1024: predict memory -10% "
+                     "vs B2 (diminishing: weights/cache writes now comparable)"),
+         cfg=dict(param_dtype=jnp.bfloat16, flash_block_q=2048,
+                  flash_block_kv=4096)),
+    dict(cell=("olmo_1b", "prefill_32k", False, True), tag="C3_int8pwp",
+         hypothesis=("beyond-paper: int8 PWPs (+per-row scales, 0.5% err) "
+                     "halve the L1 gather stream vs bf16: predict memory "
+                     "-20% vs C1 (L1 share of traffic ~40%)"),
+         cfg=None, phi_budget=0.03, phi_int8=True),
+    dict(cell=("olmo_1b", "prefill_32k", False, True), tag="C4_paft_budget",
+         hypothesis=("PAFT-deployed density ~2% (Fig 10): budget 0.02 cuts "
+                     "the static L2 capacity third vs C1: predict memory "
+                     "-25% vs C3 when combined with int8 PWPs"),
+         cfg=None, phi_budget=0.02, phi_int8=True),
+    # ---- round 3 -------------------------------------------------------------
+    dict(cell=("olmo_1b", "prefill_32k", False, True), tag="C5_combined",
+         hypothesis=("stack every confirmed C win: int8 PWP + budget 0.02 + "
+                     "chunk_rows 8192 (C2 gave -5% alone): predict memory "
+                     "-8% vs C4 (sub-additive: shared carry traffic)"),
+         cfg=None, phi_budget=0.02, phi_int8=True,
+         env=dict(PHI_CHUNK_ROWS="8192")),
+    dict(cell=("yi_34b", "train_4k", True, False), tag="A4_gradcompress_2pod",
+         hypothesis=("multi-pod: int8 error-feedback cross-pod gradient "
+                     "all-reduce (shard_map over 'pod') replaces the f32 "
+                     "cross-DCI reduce — predict cross-pod bytes /4 vs the "
+                     "plain 2-pod cell; intra-pod collectives unchanged"),
+         cfg=None, ocfg=dict(grad_compress=True)),
+]
+
+
+def run_one(exp) -> dict:
+    arch, shape, mp, phi = exp["cell"]
+    kw = {}
+    if exp.get("cfg"):
+        kw["cfg_overrides"] = exp["cfg"]
+    if exp.get("rules"):
+        kw["rules_override"] = exp["rules"]
+    if exp.get("phi_budget"):
+        from repro.core.patterns import PhiConfig
+        cfgv = dict(exp.get("cfg") or {})
+        kw["cfg_overrides"] = dict(
+            cfgv, phi=PhiConfig(nnz_budget=exp["phi_budget"],
+                                pwp_int8=bool(exp.get("phi_int8"))))
+    if exp.get("ocfg"):
+        kw["ocfg_overrides"] = exp["ocfg"]
+    for k, v in (exp.get("env") or {}).items():
+        os.environ[k] = v
+    rec = dryrun.run_and_save(arch, shape, mp, phi, force=True,
+                              tag=exp["tag"], **kw)
+    for k in (exp.get("env") or {}):
+        os.environ.pop(k, None)
+    return rec
+
+
+def main() -> None:
+    results = []
+    if os.path.exists(OUT):
+        results = load_json(OUT)
+    done = {r["tag"] for r in results}
+    for exp in EXPERIMENTS:
+        if exp["tag"] in done:
+            continue
+        log.info("=== %s: %s", exp["tag"], exp["hypothesis"][:90])
+        rec = run_one(exp)
+        entry = {"tag": exp["tag"], "cell": exp["cell"],
+                 "hypothesis": exp["hypothesis"]}
+        if "roofline" in rec:
+            entry["roofline"] = rec["roofline"]
+            entry["memory_analysis"] = rec.get("memory")
+        else:
+            entry["error"] = rec.get("error", "?")[:400]
+        results.append(entry)
+        dump_json(OUT, results)
+    log.info("hillclimb complete: %d experiments", len(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""§Roofline: render the per-(arch × shape × mesh) table from the dry-run
+cache (results/dryrun/*.json) — see launch/dryrun.py for the derivation."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "results", "dryrun"))
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def main() -> list[str]:
+    rows = ["roofline,arch,shape,mesh,phi,tag,status,compute_s,memory_s,"
+            "collective_s,bottleneck,step_s,useful,mfu"]
+    for c in load_cells():
+        key = f"roofline,{c['arch']},{c['shape']},{c['mesh']},{int(c.get('phi', False))},{c.get('tag', '')}"
+        if "skipped" in c:
+            rows.append(f"{key},skip,,,,,,,")
+            continue
+        if "error" in c:
+            rows.append(f"{key},FAIL,,,,,,,")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"{key},ok,{r['compute_s']:.4f},{r['memory_s']:.4f},"
+            f"{r['collective_s']:.4f},{r['bottleneck']},{r['step_s']:.4f},"
+            f"{r['useful_ratio']:.3f},{r['mfu']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

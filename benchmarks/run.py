@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,...`` CSV rows per table. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only table4,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table4,table2,fig7,fig10,fig12,roofline,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (fig7_dse, fig10_paft, fig12_traffic, kernels_bench,
+                            roofline, table2_accel, table4_sparsity)
+
+    sections = {
+        "table4": table4_sparsity.main,
+        "table2": table2_accel.main,
+        "fig7": fig7_dse.main,
+        "fig10": fig10_paft.main,
+        "fig12": fig12_traffic.main,
+        "roofline": roofline.main,
+        "kernels": kernels_bench.main,
+    }
+    wanted = args.only.split(",") if args.only else list(sections)
+    failed = []
+    for name in wanted:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            for row in sections[name]():
+                print(row)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            print(f"# {name} FAILED:\n" + traceback.format_exc()[-2000:])
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(f"failed sections: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 4: Phi generalizability — L1/L2 densities + theoretical
+speedups across SNN models and random matrices.
+
+The random-matrix rows are the quantitative anchor (they depend only on the
+algorithm); paper values are printed alongside for comparison. SNN rows use
+our synthetic-data-trained models (CIFAR/DVS are not available offline), so
+their densities differ from the paper's absolute numbers while exercising the
+same pipeline end-to-end.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+PAPER_RANDOM = {  # p: (L1, L2+, L2-, spB, spD)
+    0.05: (0.024, 0.026, 0.000, 2.0, 39.2),
+    0.10: (0.066, 0.034, 0.000, 2.9, 29.6),
+    0.20: (0.139, 0.064, 0.004, 2.9, 14.8),
+    0.50: (0.498, 0.079, 0.077, 3.2, 6.4),
+}
+
+
+def main() -> list[str]:
+    rows = ["table4,model,dataset,bit,L1,L2pos,L2neg,spB,spD,paper_spB"]
+    t0 = time.time()
+    suite = common.suite_stats()
+    for (kind, ds), entry in suite.items():
+        st = common.aggregate_stats(entry["layers"])
+        rows.append(
+            f"table4,{kind},{ds},{st.bit_density:.4f},{st.l1_density:.4f},"
+            f"{st.l2_pos_density:.4f},{st.l2_neg_density:.4f},"
+            f"{st.speedup_over_bit:.2f},{st.speedup_over_dense:.1f},-")
+    for p, paper in PAPER_RANDOM.items():
+        st = common.random_matrix_stats(p)
+        rows.append(
+            f"table4,random,p={p},{st.bit_density:.4f},{st.l1_density:.4f},"
+            f"{st.l2_pos_density:.4f},{st.l2_neg_density:.4f},"
+            f"{st.speedup_over_bit:.2f},{st.speedup_over_dense:.1f},{paper[3]}")
+    rows.append(f"table4,_elapsed_s,,{time.time() - t0:.1f},,,,,,")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

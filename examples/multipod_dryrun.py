@@ -1,0 +1,35 @@
+"""Run one multi-pod dry-run cell interactively and print its roofline.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch yi_34b --shape train_4k
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+# NB: repro.launch.dryrun sets XLA_FLAGS to 512 host devices on import —
+# import it FIRST, before jax.
+from repro.launch import dryrun  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--shape", default="train_4k", choices=list(dryrun.SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--phi", action="store_true")
+    args = ap.parse_args()
+    rec = dryrun.run_and_save(args.arch, args.shape, args.multipod, args.phi,
+                              force=True, tag="example")
+    if "roofline" in rec:
+        r = rec["roofline"]
+        print(f"\n{args.arch} × {args.shape} on {rec['mesh']}:")
+        print(f"  compute    {r['compute_s']:.4f} s")
+        print(f"  memory     {r['memory_s']:.4f} s")
+        print(f"  collective {r['collective_s']:.4f} s")
+        print(f"  bottleneck: {r['bottleneck']}  |  MFU {r['mfu']:.3f}  |  "
+              f"useful-FLOP ratio {r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

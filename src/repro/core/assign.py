@@ -1,0 +1,162 @@
+"""Phi pattern assignment and L1/L2 decomposition (paper Sec. 3.1).
+
+Given binary activations ``A`` (…, K) and per-partition patterns
+``P`` (T, q, k) with T = K/k, produce:
+
+  * ``idx``      (…, T) int32 — best pattern per row-partition, ``q`` = none
+  * ``residual`` (…, K) int8 in {−1, 0, +1} — the Level-2 correction matrix
+
+such that exactly (losslessness is tested property-based):
+
+    A = Level1(idx → patterns) + residual
+
+Assignment rule: pick the pattern with minimum Hamming distance; if even the
+best distance is not strictly better than the row's own popcount, assign no
+pattern (the raw row becomes the L2 entry). Bidirectional correction means a
+1→0 mismatch becomes +1 and a 0→1 mismatch becomes −1 in the residual.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import PhiConfig
+
+
+@functools.partial(jax.jit, static_argnames=())
+def assign_patterns(a: jax.Array, patterns: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Vectorised assignment. a: (..., K) binary; patterns: (T, q, k).
+
+    Returns (idx (..., T) int32 with q == "none", residual (..., K) int8).
+    """
+    T, q, k = patterns.shape
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    assert K == T * k, (K, T, k)
+    at = a.reshape(*lead, T, k).astype(jnp.float32)
+    pf = patterns.astype(jnp.float32)
+
+    # Hamming via MXU-shaped matmul: H = |a| + |p| − 2 a·p   (paper Sec. 3.2)
+    dot = jnp.einsum("...tk,tqk->...tq", at, pf)
+    pop_a = at.sum(-1)                                   # (..., T)
+    pop_p = pf.sum(-1)                                   # (T, q)
+    ham = pop_a[..., None] + pop_p - 2.0 * dot           # (..., T, q)
+
+    best = jnp.argmin(ham, axis=-1)                      # (..., T)
+    best_h = jnp.min(ham, axis=-1)
+    # Strictly better than raw bit sparsity, else no pattern (paper: "the
+    # row's original bit sparsity is retained"). Ties keep the raw row since
+    # a pattern match additionally costs an L1 retrieval.
+    use = best_h < pop_a                                 # (..., T)
+    idx = jnp.where(use, best, q).astype(jnp.int32)
+
+    chosen = jnp.where(use[..., None], pf[jnp.arange(T), best], 0.0)  # (..., T, k)
+    residual = (at - chosen).astype(jnp.int8).reshape(*lead, K)
+    return idx, residual
+
+
+def level1_matrix(idx: jax.Array, patterns: jax.Array) -> jax.Array:
+    """Materialise the Level-1 matrix (…, K) from indices (for tests/stats)."""
+    T, q, k = patterns.shape
+    pad = jnp.concatenate([patterns, jnp.zeros((T, 1, k), patterns.dtype)], axis=1)
+    gathered = pad[jnp.arange(T)[None], idx.reshape(-1, T)]  # (B, T, k)
+    return gathered.reshape(*idx.shape[:-1], T * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhiStats:
+    """Density/op statistics of a Phi decomposition (paper Table 4 columns)."""
+
+    bit_density: float       # nnz(A) / size
+    l1_density: float        # nnz(level-1 pattern bits) / size
+    l2_pos_density: float    # nnz(residual == +1) / size
+    l2_neg_density: float    # nnz(residual == −1) / size
+    idx_density: float       # assigned fraction of the pattern-index matrix
+    rows: int
+    cols: int
+
+    @property
+    def l2_density(self) -> float:
+        return self.l2_pos_density + self.l2_neg_density
+
+    @property
+    def speedup_over_bit(self) -> float:
+        """Paper "Theo. Sp. Over B." — bit-sparse ACs vs Phi L2 ACs."""
+        return self.bit_density / max(self.l2_density, 1e-12)
+
+    @property
+    def speedup_over_dense(self) -> float:
+        """Paper "Theo. Sp. Over D." — dense MACs vs Phi L2 ACs."""
+        return 1.0 / max(self.l2_density, 1e-12)
+
+
+def phi_stats(a: np.ndarray | jax.Array, patterns: np.ndarray | jax.Array) -> PhiStats:
+    """Compute Table-4 style statistics for activations ``a`` (…, K)."""
+    a = jnp.asarray(a)
+    patterns = jnp.asarray(patterns, jnp.uint8)
+    idx, residual = assign_patterns(a.reshape(-1, a.shape[-1]), patterns)
+    T, q, k = patterns.shape
+    size = float(np.prod(residual.shape))
+    pop_p = np.asarray(patterns.sum(-1), np.float32)      # (T, q)
+    idx_np = np.asarray(idx)
+    assigned = idx_np < q
+    # L1 density: total pattern bits placed / size.
+    l1_bits = pop_p[np.arange(T)[None, :], np.where(assigned, idx_np, 0)]
+    l1_bits = (l1_bits * assigned).sum()
+    res = np.asarray(residual)
+    return PhiStats(
+        bit_density=float(np.asarray(a, np.float32).mean()),
+        l1_density=float(l1_bits / size),
+        l2_pos_density=float((res == 1).mean()),
+        l2_neg_density=float((res == -1).mean()),
+        idx_density=float(assigned.mean()),
+        rows=int(res.reshape(-1, a.shape[-1]).shape[0]),
+        cols=int(a.shape[-1]),
+    )
+
+
+def pack_l2_coo(
+    residual: np.ndarray, nnz_cap: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pack an (M, K) {−1,0,1} residual into padded COO arrays.
+
+    Returns (rows, cols, signs) each (nnz_cap,) with out-of-range sentinel
+    rows == M for padding, plus the true nnz. Host-side (numpy) variant; the
+    jit path uses ``pack_l2_coo_jit``.
+    """
+    r = np.asarray(residual)
+    M, K = r.shape
+    rows, cols = np.nonzero(r)
+    signs = r[rows, cols]
+    nnz = rows.shape[0]
+    if nnz > nnz_cap:
+        raise ValueError(f"nnz {nnz} exceeds capacity {nnz_cap}")
+    pr = np.full(nnz_cap, M, np.int32)
+    pc = np.zeros(nnz_cap, np.int32)
+    ps = np.zeros(nnz_cap, np.int8)
+    pr[:nnz], pc[:nnz], ps[:nnz] = rows, cols, signs
+    return pr, pc, ps, nnz
+
+
+@functools.partial(jax.jit, static_argnames=("nnz_cap",))
+def pack_l2_coo_jit(residual: jax.Array, nnz_cap: int):
+    """Jit-safe padded COO packing (static capacity, sentinel row == M).
+
+    The static ``nnz_cap`` plays the role of the ASIC packer's fixed pack
+    capacity: it is the compile-time load-balance budget. Overflowing entries
+    are counted (returned) so callers can widen the budget; the runtime path
+    asserts against overflow in debug mode.
+    """
+    M, K = residual.shape
+    flat = residual.reshape(-1)
+    nz = jnp.nonzero(flat, size=nnz_cap, fill_value=M * K)[0]
+    rows = (nz // K).astype(jnp.int32)
+    cols = jnp.where(nz < M * K, nz % K, 0).astype(jnp.int32)
+    signs = jnp.where(nz < M * K, flat[jnp.clip(nz, 0, M * K - 1)], 0).astype(jnp.int8)
+    rows = jnp.where(nz < M * K, rows, M)
+    overflow = (flat != 0).sum() - (signs != 0).sum()
+    return rows, cols, signs, overflow

@@ -1,0 +1,79 @@
+"""Pattern-Aware Fine-Tuning (paper Sec. 3.3).
+
+Adds ``λ · Σ_l N_l · Σ H(act, assigned pattern)`` to the training loss. The
+pattern *assignment* follows the Sec. 3.1 rules and is stop-gradient'd (it is
+a discrete argmin); the Hamming distance itself is differentiable in the
+activations because for binary a and fixed p*:
+
+    H(a, p*) = Σ a·(1−p*) + p*·(1−a)
+
+and gradients flow into ``a`` through the LIF surrogate. Rows with no
+assigned pattern use p* = 0, i.e. their own popcount — matching the paper's
+definition that R counts exactly the nonzeros of the Level-2 matrix.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assign import assign_patterns, level1_matrix
+from repro.snn import models
+from repro.snn.models import PhiState, SNNConfig
+
+
+def hamming_to_assigned(act: jax.Array, patterns: jax.Array) -> jax.Array:
+    """Differentiable Σ H(act rows, assigned patterns); act (..., K) binary."""
+    a2 = act.reshape(-1, act.shape[-1])
+    idx, _ = assign_patterns(jax.lax.stop_gradient(a2), patterns)
+    p_star = level1_matrix(idx, patterns.astype(jnp.float32))  # (M, K)
+    h = a2 * (1.0 - p_star) + p_star * (1.0 - a2)
+    return h.sum()
+
+
+def paft_regularizer(
+    cfg: SNNConfig, phi: PhiState, lam: float
+) -> Callable[[dict, dict], jax.Array]:
+    """Regularizer for `snn.train.make_train_step`: (params, captured) -> loss."""
+
+    def reg(params: dict, captured: dict) -> jax.Array:
+        total = 0.0
+        norm = 0.0
+        for name, act in captured.items():
+            if name not in phi.patterns:
+                continue
+            pats = jnp.asarray(phi.patterns[name])
+            n_l = float(params[name]["w"].shape[-1])  # paper: weight by N_l
+            K = pats.shape[0] * pats.shape[2]
+            total = total + n_l * hamming_to_assigned(act[..., :K], pats)
+            norm = norm + n_l * act.reshape(-1, act.shape[-1]).shape[0] * K
+        return lam * total / jnp.maximum(norm, 1.0)
+
+    return reg
+
+
+def paft_finetune(
+    params: dict,
+    cfg: SNNConfig,
+    phi: PhiState,
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    lam: float = 0.3,
+    lr: float = 1e-4,
+    steps: int = 100,
+    batch: int = 64,
+    seed: int = 0,
+):
+    """Paper Sec. 3.4 workflow step: a few epochs of fine-tuning with the
+    Hamming regularizer against the already-calibrated patterns."""
+    from repro.snn import train as snn_train
+    from repro.train import optimizer as opt
+
+    ocfg = opt.OptConfig(lr=lr, warmup_steps=0, decay_steps=steps, weight_decay=0.0)
+    return snn_train.train(
+        cfg, x, y, steps=steps, batch=batch, ocfg=ocfg, seed=seed,
+        regularizer=paft_regularizer(cfg, phi, lam), params=params,
+    )

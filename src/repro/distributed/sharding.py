@@ -1,0 +1,201 @@
+"""Logical-axis sharding: the single place where parallelism is decided.
+
+Models annotate every parameter and activation with *logical* axis names
+('batch', 'heads', 'mlp', 'fsdp', …). A rule table maps logical names to mesh
+axes; swapping rule tables re-parallelises the whole framework without
+touching model code — this is how the §Perf hillclimbs change sharding.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Default rule tables. Values are mesh-axis names (or tuples) or None.
+TRAIN_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),   # DP over pod (DCI) × data (ICI)
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",       # TP over attention heads / mlp hidden
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "saved_seq": "model",       # remat-saved activations: shard seq over TP
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",         # EP
+    "expert_mlp": "data",       # 2nd weight-shard dim for giant MoEs
+    "embed": None,
+    "fsdp": "data",             # ZeRO-3 parameter dim (intra-pod only)
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "pattern": None,            # Phi pattern/index dims
+    "pwp_tiles": "data",        # Phi PWP K-tile dim (weight-heavy side)
+}
+
+# Serving: no optimizer state; keep weights TP-sharded, replicate over data
+# except the giant-MoE expert_mlp dim and Phi PWPs (8× weight bytes).
+SERVE_RULES: dict[str, Any] = dict(
+    TRAIN_RULES,
+    fsdp=None,
+    saved_seq=None,
+    expert_mlp="data",
+    pwp_tiles="data",
+)
+
+
+_local = threading.local()
+
+
+def current_rules() -> dict[str, Any]:
+    return getattr(_local, "rules", TRAIN_RULES)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_local, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict[str, Any], mesh: Mesh | None = None):
+    prev_r = getattr(_local, "rules", None)
+    prev_m = getattr(_local, "mesh", None)
+    _local.rules = rules
+    _local.mesh = mesh
+    try:
+        yield
+    finally:
+        _local.rules = prev_r
+        _local.mesh = prev_m
+
+
+def resolve_spec(axes: tuple[str | None, ...], rules: dict[str, Any] | None = None,
+                 mesh: Mesh | None = None) -> P:
+    """Map logical axes -> PartitionSpec, dropping axes absent from the mesh."""
+    rules = rules or current_rules()
+    mesh = mesh or current_mesh()
+    names = set(mesh.axis_names) if mesh is not None else {"pod", "data", "model"}
+    out = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if isinstance(m, tuple):
+            m = tuple(x for x in m if x in names) or None
+            if isinstance(m, tuple) and len(m) == 1:
+                m = m[0]
+        elif m is not None and m not in names:
+            m = None
+        out.append(m)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain activation sharding by logical axes (no-op without mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, resolve_spec(axes)))
+
+
+# ----------------------------------------------------------------- params ---
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + dtype + logical axes + init law."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"      # normal | zeros | ones | scaled
+    scale: float | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def specs_to_sds(specs: Any) -> Any:
+    """ParamSpec tree -> ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        out = 1
+        for a in ax:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[ax]
+
+
+def shape_aware_spec(shape: tuple[int, ...], axes: tuple, mesh: Mesh,
+                     rules: dict[str, Any] | None = None) -> P:
+    """resolve_spec + divisibility fallback: a dim that is not divisible by
+    its mesh-axis product is replicated instead (e.g. vocab 50280 on 16-way
+    'model', or batch 1 on the DP axes in long_500k decode)."""
+    p = resolve_spec(axes, rules, mesh)
+    entries = list(p) + [None] * (len(shape) - len(p))
+    out = []
+    used: set = set()
+    for dim, ax in zip(shape, entries):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        # a mesh axis may shard at most one dim: first occurrence wins
+        if ax is not None:
+            names = ax if isinstance(ax, tuple) else (ax,)
+            if any(n in used for n in names):
+                ax = None
+            else:
+                used.update(names)
+        out.append(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def specs_to_shardings(specs: Any, mesh: Mesh, rules: dict[str, Any]) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, shape_aware_spec(s.shape, s.axes, mesh, rules)),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else (1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(specs: Any, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_bytes(specs: Any) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(specs, is_leaf=is_spec)
+    )

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused LIF neuron update (paper's Spiking Neuron Array).
+
+One fused elementwise pass over a (rows, features) tile:
+    v_int  = v·decay + x          (integrate)
+    s      = v_int ≥ θ            (fire)
+    v'     = hard:  v_int·(1−s)   (reset)
+             soft:  v_int − θ·s
+
+Fusing the three steps keeps the membrane state in VREGs for the whole
+update — the ASIC's neuron array equivalent. The surrogate-gradient VJP for
+training lives in `snn/lif.py` (the kernel is forward-only; spikes are
+non-differentiable by definition).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lif_kernel(v_ref, x_ref, spike_ref, vout_ref, *, decay: float, threshold: float, reset: str):
+    v = v_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    v_int = v * decay + x
+    s = (v_int >= threshold).astype(jnp.float32)
+    if reset == "hard":
+        v_new = v_int * (1.0 - s)
+    else:  # soft
+        v_new = v_int - threshold * s
+    spike_ref[...] = s.astype(spike_ref.dtype)
+    vout_ref[...] = v_new.astype(vout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("decay", "threshold", "reset", "block_r", "block_c", "interpret")
+)
+def lif_pallas(
+    v: jax.Array,
+    x: jax.Array,
+    *,
+    decay: float = 0.5,
+    threshold: float = 1.0,
+    reset: str = "hard",
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """v, x: (R, C) f32. Returns (spike (R, C), v' (R, C)). ops.py pads."""
+    R, C = v.shape
+    assert R % block_r == 0 and C % block_c == 0, (v.shape, block_r, block_c)
+    grid = (R // block_r, C // block_c)
+    kernel = functools.partial(_lif_kernel, decay=decay, threshold=threshold, reset=reset)
+    spec = pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), v.dtype),
+            jax.ShapeDtypeStruct((R, C), v.dtype),
+        ],
+        interpret=interpret,
+    )(v, x)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: Phi pattern matcher (paper Sec. 4.2.1, Fig. 4a).
+
+The ASIC uses a 1-D systolic array of popcount matchers. On TPU the 128-way
+Hamming comparison is reshaped into an MXU matmul:
+
+    H(a, p) = |a|₁ + |p|₁ − 2·a·pᵀ
+
+so one (bm×k)·(k×q) matmul scores a whole row-block against all q patterns at
+once; the argmin and the bidirectional {−1,0,+1} residual extraction run on
+the VPU. Pattern selection (gather of the chosen pattern row) is itself a
+one-hot matmul — gathers become systolic contractions, the canonical TPU
+adaptation of banked-SRAM lookups.
+
+Grid: (M/bm, T) — one K-partition per grid column. Per-instance VMEM:
+a-block (bm, k) + patterns (q, k) + scores (bm, q), ≈ bm·q·4B ≈ 128KiB at
+bm=256, q=128; well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matcher_kernel(a_ref, p_ref, idx_ref, res_ref, *, q: int):
+    a = a_ref[...].astype(jnp.float32)            # (bm, k) binary
+    p = p_ref[0].astype(jnp.float32)              # (q, k)
+    # Hamming-as-matmul (MXU): H = |a| + |p| − 2 a·pᵀ
+    dot = jnp.dot(a, p.T, preferred_element_type=jnp.float32)   # (bm, q)
+    pop_a = a.sum(-1)                                            # (bm,)
+    pop_p = p.sum(-1)                                            # (q,)
+    ham = pop_a[:, None] + pop_p[None, :] - 2.0 * dot
+    best = jnp.argmin(ham, axis=-1)                              # (bm,)
+    best_h = jnp.min(ham, axis=-1)
+    use = best_h < pop_a                                         # strict: ties keep raw bits
+    idx = jnp.where(use, best, q).astype(jnp.int32)
+    # Chosen pattern rows via one-hot matmul (systolic gather).
+    onehot = (best[:, None] == jax.lax.iota(jnp.int32, q)[None, :]).astype(jnp.float32)
+    chosen = jnp.dot(onehot, p, preferred_element_type=jnp.float32)  # (bm, k)
+    chosen = jnp.where(use[:, None], chosen, 0.0)
+    idx_ref[...] = idx[:, None]
+    res_ref[...] = (a - chosen).astype(res_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def matcher_pallas(
+    a: jax.Array,
+    patterns: jax.Array,
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """a: (M, K) binary float; patterns: (T, q, k) with K = T·k.
+
+    Returns (idx (M, T) int32 in [0, q], residual (M, K) int8).
+    M must be a multiple of block_m (ops.py pads).
+    """
+    M, K = a.shape
+    T, q, k = patterns.shape
+    assert K == T * k and M % block_m == 0, (a.shape, patterns.shape, block_m)
+    grid = (M // block_m, T)
+    kernel = functools.partial(_matcher_kernel, q=q)
+    idx, res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, t: (i, t)),
+            pl.BlockSpec((1, q, k), lambda i, t: (t, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, t: (i, t)),
+            pl.BlockSpec((block_m, k), lambda i, t: (i, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, T), jnp.int32),
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), patterns.astype(jnp.float32))
+    return idx, res

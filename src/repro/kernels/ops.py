@@ -1,0 +1,250 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * shape padding to block multiples (kernels require exact tiling);
+  * backend dispatch — Pallas TPU kernels run natively on TPU, in
+    ``interpret=True`` mode on CPU (correctness validation), and the pure-XLA
+    reference path (`ref.py`) is used inside pjit-lowered distributed graphs
+    (Pallas cannot be partitioned/compiled by the CPU SPMD pipeline);
+  * COO bucketing for the L2 spmm (the static analogue of the ASIC packer);
+  * the composite ``phi_matmul`` = matcher → L1 gather → L2 spmm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import PhiConfig, pattern_weight_products  # noqa: F401 (re-export)
+from repro.kernels import ref
+from repro.kernels.lif import lif_pallas
+from repro.kernels.matcher import matcher_pallas
+from repro.kernels.phi_gather import l1_gather_pallas
+from repro.kernels.phi_spmm import l2_spmm_pallas
+from repro.utils import cdiv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, fill=0) -> jax.Array:
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1), constant_values=fill)
+
+
+# ---------------------------------------------------------------- matcher ---
+def matcher(a: jax.Array, patterns: jax.Array, *, block_m: int = 256):
+    """Pattern match: a (..., K) binary, patterns (T, q, k) -> (idx, residual)."""
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    a2 = a.reshape(-1, K)
+    M = a2.shape[0]
+    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    a2 = _pad_rows(a2, bm)
+    idx, res = matcher_pallas(a2, patterns, block_m=bm, interpret=_interpret())
+    T = patterns.shape[0]
+    return idx[:M].reshape(*lead, T), res[:M].reshape(*lead, K)
+
+
+# -------------------------------------------------------------- L1 gather ---
+def l1_gather(idx: jax.Array, pwp: jax.Array, *, block_m: int = 256, block_n: int = 256,
+              mode: str = "mxu"):
+    """idx (..., T) -> (..., N) sum of PWP rows."""
+    lead = idx.shape[:-1]
+    T = idx.shape[-1]
+    N = pwp.shape[-1]
+    idx2 = idx.reshape(-1, T)
+    M = idx2.shape[0]
+    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    bn = min(block_n, N)
+    # Padding rows index the all-zero slot q.
+    idx2 = _pad_rows(idx2, bm, fill=pwp.shape[1] - 1)
+    assert N % bn == 0, (N, bn)
+    out = l1_gather_pallas(idx2, pwp, block_m=bm, block_n=bn, mode=mode,
+                           interpret=_interpret())
+    return out[:M].reshape(*lead, N)
+
+
+# ---------------------------------------------------------------- L2 spmm ---
+def bucket_coo(rows: jax.Array, cols: jax.Array, signs: jax.Array, m: int,
+               block_m: int, cap: int):
+    """Bucket row-sorted padded COO into per-M-block packs.
+
+    rows must be ascending (sentinel == m last), as produced by
+    ``pack_l2_coo_jit``. Returns (G, cap) local rows (sentinel block_m),
+    (G, cap) cols, (G, cap) signs, and per-block overflow dropped count.
+    """
+    G = cdiv(m, block_m)
+    starts = jnp.searchsorted(rows, jnp.arange(G + 1) * block_m, side="left")
+    take = starts[:-1, None] + jnp.arange(cap)[None, :]            # (G, cap)
+    valid = take < starts[1:, None]
+    take_c = jnp.clip(take, 0, rows.shape[0] - 1)
+    r = jnp.where(valid, rows[take_c] - jnp.arange(G)[:, None] * block_m, block_m)
+    c = jnp.where(valid, cols[take_c], 0)
+    s = jnp.where(valid, signs[take_c], 0)
+    dropped = (starts[1:] - starts[:-1] - cap).clip(min=0).sum()
+    return r.astype(jnp.int32), c.astype(jnp.int32), s, dropped
+
+
+def l2_spmm(rows: jax.Array, cols: jax.Array, signs: jax.Array, w: jax.Array,
+            m: int, *, block_m: int = 256, block_n: int = 256, cap: int | None = None,
+            mode: str = "take"):
+    """Padded COO (sentinel row == m) × w (K, N) -> (m, N) f32."""
+    K, N = w.shape
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    bn = min(block_n, N)
+    assert N % bn == 0
+    G = cdiv(m, bm)
+    if cap is None:
+        cap = int(rows.shape[0])
+    br, bc, bs, _ = bucket_coo(rows, cols, signs, G * bm, bm, cap)
+    out = l2_spmm_pallas(br, bc, bs, w, block_m=bm, block_n=bn, mode=mode,
+                         interpret=_interpret())
+    return out[:m]
+
+
+# -------------------------------------------------------------------- LIF ---
+def lif_step(v: jax.Array, x: jax.Array, *, decay: float = 0.5, threshold: float = 1.0,
+             reset: str = "hard", use_pallas: bool = True):
+    """LIF update on arbitrary-shape tensors; returns (spike, v')."""
+    if not use_pallas:
+        return ref.lif_ref(v, x, decay, threshold, reset)
+    shape = v.shape
+    n = int(np.prod(shape))
+    c = shape[-1] if v.ndim > 1 and shape[-1] % 128 == 0 else 128
+    r = cdiv(n, c)
+    br = min(256, max(8, 1 << (r - 1).bit_length()))
+    pad = r * c - n
+    v2 = jnp.pad(v.reshape(-1), (0, pad)).reshape(r, c)
+    x2 = jnp.pad(x.reshape(-1), (0, pad)).reshape(r, c)
+    v2 = _pad_rows(v2, br)
+    x2 = _pad_rows(x2, br)
+    s, vn = lif_pallas(v2, x2, decay=decay, threshold=threshold, reset=reset,
+                       block_r=br, block_c=c, interpret=_interpret())
+    s = s.reshape(-1)[:n].reshape(shape)
+    vn = vn.reshape(-1)[:n].reshape(shape)
+    return s, vn
+
+
+# -------------------------------------------------------- pjit-scale path ---
+def _phi_matmul_coo_chunked(a2, w, patterns, pwp, nnz_budget: float,
+                            chunk_rows: int | None = None, entry_block: int = 8192,
+                            gather_dtype=None, pwp_scale=None):
+    import os as _os
+    if chunk_rows is None:
+        chunk_rows = int(_os.environ.get("PHI_CHUNK_ROWS", "2048"))
+    gather_dtype = gather_dtype or jnp.float32
+    """Scalable pure-XLA Phi matmul: row-chunked (K-first hardware tiling).
+
+    Per chunk of ≤``chunk_rows`` rows:
+      L1 — scan over K-tiles accumulating ``pwp[t][idx[:, t]]`` (a (chunk, N)
+           gather per tile; never materialises the (M, T, N) tensor);
+      L2 — padded COO (int32-safe: indices local to the chunk), processed in
+           ``entry_block``-sized slabs of gather + scatter-add.
+    This is the lowering used inside pjit graphs at 32k-prefill scale, where
+    the flat formulation overflows int32 and the dense gather wouldn't fit.
+    """
+    from repro.core.assign import assign_patterns, pack_l2_coo_jit
+
+    M, K = a2.shape
+    N = w.shape[-1]
+    nc = cdiv(M, chunk_rows)
+    pad = nc * chunk_rows - M
+    a3 = jnp.pad(a2, ((0, pad), (0, 0))).reshape(nc, chunk_rows, K)
+    cap = max(128, int(nnz_budget * chunk_rows * K))
+    cap = ((cap + entry_block - 1) // entry_block) * entry_block
+    wf = w.astype(gather_dtype)     # gathers stream in gather_dtype, accumulate f32
+    pwpf = pwp if pwp.dtype == jnp.int8 else pwp.astype(gather_dtype)
+
+    def one_chunk(chunk_a):
+        idx, residual = assign_patterns(chunk_a, patterns)
+
+        if pwp_scale is not None:  # int8 PWP: dequantise per gathered row
+            def tile_step(acc, tp):
+                pwp_t, scale_t, idx_t = tp
+                rows = pwp_t[idx_t].astype(jnp.float32) * scale_t[idx_t][:, None]
+                return acc + rows, None
+
+            out1, _ = jax.lax.scan(
+                tile_step, jnp.zeros((chunk_rows, N), jnp.float32),
+                (pwpf, pwp_scale.astype(jnp.float32), jnp.swapaxes(idx, 0, 1)))
+        else:
+            def tile_step(acc, tp):
+                pwp_t, idx_t = tp
+                return acc + pwp_t[idx_t].astype(jnp.float32), None
+
+            out1, _ = jax.lax.scan(
+                tile_step, jnp.zeros((chunk_rows, N), jnp.float32),
+                (pwpf, jnp.swapaxes(idx, 0, 1)))
+
+        rows, cols, signs, _ = pack_l2_coo_jit(residual, cap)
+        blocks = (rows.reshape(-1, entry_block), cols.reshape(-1, entry_block),
+                  signs.reshape(-1, entry_block))
+
+        def entry_step(acc, blk):
+            r, c, s = blk
+            vals = wf[c].astype(jnp.float32) * s.astype(jnp.float32)[:, None]
+            return acc.at[r].add(vals, mode="drop"), None
+
+        out2, _ = jax.lax.scan(
+            entry_step, jnp.zeros((chunk_rows + 1, N), jnp.float32), blocks)
+        return out1 + out2[:chunk_rows]
+
+    out = jax.lax.map(one_chunk, a3)
+    return out.reshape(nc * chunk_rows, N)[:M]
+
+
+# -------------------------------------------------------------- composite ---
+def phi_matmul(
+    a: jax.Array,
+    w: jax.Array,
+    patterns: jax.Array,
+    pwp: jax.Array,
+    *,
+    impl: str = "pallas",
+    nnz_budget: float = 0.08,
+    block_m: int = 256,
+    block_n: int = 256,
+    gather_dtype=None,
+    pwp_scale=None,
+) -> jax.Array:
+    """Full Phi sparse matmul: a (..., K) binary × w (K, N) -> (..., N) f32.
+
+    impl:
+      "pallas" — matcher/gather/spmm kernels (interpret mode off-TPU);
+      "coo"    — pure-XLA gather/scatter path (pjit-safe; used by dry-run);
+      "ref"    — dense L2 oracle (exactness baseline).
+    ``nnz_budget`` is the static L2 capacity as a fraction of M·K (paper
+    measures ≈3% density; default leaves 2.6× headroom).
+    """
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    N = w.shape[-1]
+    a2 = a.reshape(-1, K)
+    M = a2.shape[0]
+    if impl == "ref":
+        return ref.phi_matmul_ref(a2, w, patterns, pwp).reshape(*lead, N)
+
+    from repro.core.assign import assign_patterns, pack_l2_coo_jit
+
+    if impl == "coo":
+        return _phi_matmul_coo_chunked(a2, w, patterns, pwp, nnz_budget,
+                                       gather_dtype=gather_dtype,
+                                       pwp_scale=pwp_scale).reshape(*lead, N)
+
+    assert impl == "pallas", impl
+    idx, residual = matcher(a2, patterns, block_m=block_m)
+    out1 = l1_gather(idx, pwp, block_m=block_m, block_n=block_n)
+    cap = max(128, int(nnz_budget * M * K))
+    rows, cols, signs, _ = pack_l2_coo_jit(residual, cap)
+    # Per-block capacity: same budget with 4× local-imbalance headroom.
+    per_block = max(8, min(cap, int(4 * nnz_budget * block_m * K)))
+    out2 = l2_spmm(rows, cols, signs, w.astype(jnp.float32), M,
+                   block_m=block_m, block_n=block_n, cap=per_block)
+    return (out1 + out2).reshape(*lead, N)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: Level-1 PWP retrieval + K-tile reduction (paper Sec. 4.4).
+
+Computes ``out[m] = Σ_t PWP[t, idx[m, t], :]`` — the L1 processor's job: turn
+pattern indices into pre-computed row retrievals and reduce over the K tiles.
+
+TPU mapping decisions (vs. the ASIC's 16-bank PWP buffer + 16→8 crossbar):
+
+* Grid is (M/bm, N/bn, T) with **T innermost** — the paper's K-first schedule.
+  The f32 output block lives in VMEM across the T sweep and is initialised at
+  t == 0, so partial sums never round-trip to HBM.
+* Each grid step streams one (q+1, bn) PWP tile HBM→VMEM. PWP traffic per
+  M-stripe is the whole PWP stripe — the term the roofline's memory component
+  measures (the ASIC's prefetcher skips unused patterns; on TPU dense DMA of
+  the stripe is faster than sparse skipping, so the traffic is shaped at the
+  source instead — see EXPERIMENTS.md §Perf).
+* ``mode="mxu"`` does the retrieval as one-hot(idx) @ PWP — a (bm×q1)·(q1×bn)
+  systolic contraction; ``mode="take"`` uses an in-VMEM vector gather. MXU
+  mode trades (q+1)/k ≈ 8× more MACs for zero reliance on gather lowering;
+  since this kernel is HBM-bound on the PWP stream, the MACs are free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(idx_ref, pwp_ref, out_ref, *, q1: int, mode: str):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[:, 0]                                   # (bm,)
+    pwp = pwp_ref[0]                                      # (q1, bn)
+    if mode == "mxu":
+        onehot = (idx[:, None] == jax.lax.iota(jnp.int32, q1)[None, :]).astype(jnp.float32)
+        rows = jnp.dot(onehot, pwp.astype(jnp.float32), preferred_element_type=jnp.float32)
+    elif mode == "take":
+        rows = jnp.take(pwp, idx, axis=0).astype(jnp.float32)
+    else:
+        raise ValueError(mode)
+    out_ref[...] += rows
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "mode", "interpret")
+)
+def l1_gather_pallas(
+    idx: jax.Array,
+    pwp: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    mode: str = "mxu",
+    interpret: bool = False,
+) -> jax.Array:
+    """idx: (M, T) int32 in [0, q]; pwp: (T, q+1, N) with pwp[:, q] == 0.
+
+    Returns (M, N) f32. M, N must be multiples of the block sizes (ops.py pads).
+    """
+    M, T = idx.shape
+    Tp, q1, N = pwp.shape
+    assert Tp == T and M % block_m == 0 and N % block_n == 0
+    grid = (M // block_m, N // block_n, T)
+    kernel = functools.partial(_gather_kernel, q1=q1, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j, t: (i, t)),
+            pl.BlockSpec((1, q1, block_n), lambda i, j, t: (t, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(idx, pwp)

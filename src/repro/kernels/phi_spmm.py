@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Level-2 {±1} COO spmm (paper Sec. 4.3, Fig. 5/6).
+
+Computes ``out[r] += sign · W[c, :]`` over the Level-2 correction entries.
+The ASIC packs sparse rows into 8-unit packs feeding a reconfigurable adder
+tree; the TPU analogue is **static packing**: entries are bucketed by output
+M-block on the host/XLA side (`ops.bucket_coo`), each block padded to a fixed
+per-block capacity C — the compile-time load-balance budget that replaces the
+dynamic packer.
+
+Per (m-block, n-block) grid cell:
+  1. gather:  rows = W[cols]      — in-VMEM vector gather from the (K, bn)
+              weight stripe ("take"), or a one-hot MXU contraction ("mxu");
+  2. scale:   rows *= sign (±1);
+  3. scatter: out += onehotᵀ(local_row) @ rows — scatter-add expressed as a
+              systolic contraction (the adder tree's TPU shape); sentinel
+              local_row == bm pads to an all-zero one-hot column, so padding
+              entries vanish without branches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(rows_ref, cols_ref, signs_ref, w_ref, out_ref, *, block_m: int, mode: str):
+    rows = rows_ref[0]                                    # (C,) local in [0, bm]
+    cols = cols_ref[0]                                    # (C,)
+    signs = signs_ref[0].astype(jnp.float32)              # (C,)
+    w = w_ref[...]                                        # (K, bn)
+    if mode == "take":
+        gathered = jnp.take(w, cols, axis=0).astype(jnp.float32)
+    elif mode == "mxu":
+        onehot_c = (cols[:, None] == jax.lax.iota(jnp.int32, w.shape[0])[None, :]).astype(
+            jnp.float32
+        )
+        gathered = jnp.dot(onehot_c, w.astype(jnp.float32), preferred_element_type=jnp.float32)
+    else:
+        raise ValueError(mode)
+    gathered = gathered * signs[:, None]                  # (C, bn)
+    onehot_r = (rows[:, None] == jax.lax.iota(jnp.int32, block_m)[None, :]).astype(jnp.float32)
+    out_ref[...] = jnp.dot(onehot_r.T, gathered, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "mode", "interpret")
+)
+def l2_spmm_pallas(
+    rows: jax.Array,
+    cols: jax.Array,
+    signs: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    mode: str = "take",
+    interpret: bool = False,
+) -> jax.Array:
+    """Bucketed COO spmm.
+
+    rows:  (G, C) int32 — row id *local to the m-block* (sentinel == block_m)
+    cols:  (G, C) int32 — K index into w
+    signs: (G, C) — ±1 (0 for padding)
+    w:     (K, N)
+    Returns (G · block_m, N) f32.
+    """
+    G, C = rows.shape
+    K, N = w.shape
+    assert N % block_n == 0
+    grid = (G, N // block_n)
+    kernel = functools.partial(_spmm_kernel, block_m=block_m, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((G * block_m, N), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, signs.astype(jnp.float32), w)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the lowering path used by the multi-pod dry-run: Pallas TPU
+kernels cannot be compiled by the CPU XLA backend, so the distributed graphs
+call these references (whose gather/scatter/matmul structure mirrors the
+kernels' memory traffic) unless running on real TPU hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.assign import assign_patterns
+
+
+def matcher_ref(a: jax.Array, patterns: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Best-pattern match per row-partition.
+
+    a: (M, K) binary; patterns: (T, q, k). Returns (idx (M,T) int32 in [0,q]
+    with q == no-pattern, residual (M,K) int8).
+    """
+    return assign_patterns(a, patterns)
+
+
+def l1_gather_ref(idx: jax.Array, pwp: jax.Array) -> jax.Array:
+    """Level-1 PWP retrieval and K-tile reduction.
+
+    idx: (M, T) int32 in [0, q]; pwp: (T, q+1, N) with pwp[:, q] == 0.
+    out[m] = Σ_t pwp[t, idx[m, t]].
+    """
+    T = idx.shape[-1]
+    rows = pwp[jnp.arange(T)[None, :], idx]        # (M, T, N) gather
+    return rows.sum(axis=-2)
+
+
+def l2_spmm_ref(
+    rows: jax.Array, cols: jax.Array, signs: jax.Array, w: jax.Array, m: int
+) -> jax.Array:
+    """Level-2 {±1} COO spmm: out[r] += sign · w[c].
+
+    rows/cols/signs: (P,) padded COO (sentinel rows == m are dropped);
+    w: (K, N). Returns (m, N) f32.
+    """
+    gathered = w[cols].astype(jnp.float32) * signs.astype(jnp.float32)[:, None]
+    out = jnp.zeros((m + 1, w.shape[1]), jnp.float32)
+    out = out.at[rows].add(gathered)
+    return out[:m]
+
+
+def l2_dense_ref(residual: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense evaluation of the L2 correction (exactness oracle)."""
+    return residual.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def phi_matmul_ref(
+    a: jax.Array, w: jax.Array, patterns: jax.Array, pwp: jax.Array
+) -> jax.Array:
+    """Full Phi decomposition evaluated densely; equals ``a @ w`` exactly."""
+    idx, residual = matcher_ref(a, patterns)
+    return l1_gather_ref(idx, pwp) + l2_dense_ref(residual, w)
+
+
+def lif_ref(
+    v: jax.Array,
+    x: jax.Array,
+    decay: float | jax.Array,
+    threshold: float | jax.Array,
+    reset_mode: str = "hard",
+) -> tuple[jax.Array, jax.Array]:
+    """LIF neuron step: integrate, fire, reset.
+
+    v: membrane potential; x: synaptic input. Returns (spike f32 {0,1}, v').
+    hard reset: v' = v_int · (1 − s); soft reset: v' = v_int − θ·s.
+    """
+    v_int = v * decay + x
+    spike = (v_int >= threshold).astype(x.dtype)
+    if reset_mode == "hard":
+        v_new = v_int * (1.0 - spike)
+    elif reset_mode == "soft":
+        v_new = v_int - threshold * spike
+    else:
+        raise ValueError(reset_mode)
+    return spike, v_new

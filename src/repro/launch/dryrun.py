@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the production
+mesh is built from 512 placeholder host devices, every step function is
+jit-lowered with ShapeDtypeStruct inputs (no allocation), compiled by the
+SPMD pipeline, and the compiled artifact's memory/cost analyses + parsed
+collective bytes are cached to results/dryrun/*.json for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only]
+"""
+import argparse
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, phi_variant
+from repro.distributed import sharding as shd
+from repro.distributed.hlo_analysis import collective_bytes, roofline_from_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.train import optimizer as opt
+from repro.train import step as step_lib
+from repro.utils import dump_json, human_bytes, human_count, load_json, log
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+RESULTS = os.path.abspath(RESULTS)
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def input_specs(cfg, shape_id: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_id]
+    return model.input_batch_specs(cfg, sh["batch"], sh["seq"],
+                                   with_labels=(sh["kind"] == "train"))
+
+
+def _model_flops(cfg, shape_id: str) -> float:
+    sh = SHAPES[shape_id]
+    tot, act = cfg.param_count()
+    tokens = sh["batch"] * sh["seq"]
+    if sh["kind"] == "train":
+        return 6.0 * act * tokens
+    if sh["kind"] == "prefill":
+        mult = cfg.phi.timesteps if cfg.spiking and cfg.phi else 1
+        return 2.0 * act * tokens * mult
+    return 2.0 * act * sh["batch"]  # decode: one token per row
+
+
+def _batch_shardings(cfg, batch_sds, mesh, rules):
+    out = {}
+    for k, v in batch_sds.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, shd.shape_aware_spec(v.shape, axes, mesh, rules))
+    return out
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool, phi: bool = False,
+             rules_override: dict | None = None, tag: str = "",
+             cfg_overrides: dict | None = None, ocfg_overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    sh = SHAPES[shape_id]
+    cfg = get_config(arch)
+    if phi:
+        cfg = phi_variant(cfg)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec: dict = {
+        "arch": arch, "shape": shape_id, "mesh": "x".join(map(str, mesh.shape.values())),
+        "phi": phi, "tag": tag,
+    }
+
+    if shape_id == "long_500k" and not cfg.sub_quadratic:
+        rec["skipped"] = ("pure full-attention arch: long_500k requires "
+                          "sub-quadratic attention (per assignment)")
+        return rec
+    if phi and sh["kind"] == "train":
+        rec["skipped"] = ("Phi spiking mode is the serving path (paper: "
+                          "inference technique; training uses PAFT on the "
+                          "dense path, Sec. 3.3/3.4)")
+        return rec
+
+    kind = sh["kind"]
+    rules = rules_override or (shd.TRAIN_RULES if kind == "train" else shd.SERVE_RULES)
+    batch_sds = input_specs(cfg, shape_id)
+
+    with mesh:
+        if kind == "train":
+            ocfg = opt.OptConfig(factored=cfg.param_dtype == jnp.bfloat16,
+                                 **(ocfg_overrides or {}))
+            bundle, p_specs, o_specs, _ = step_lib.make_train_step(cfg, ocfg, mesh, rules)
+            p_sds = shd.specs_to_sds(p_specs)
+            o_sds = shd.specs_to_sds(o_specs)
+            p_sh = shd.specs_to_shardings(p_specs, mesh, rules)
+            o_sh = shd.specs_to_shardings(o_specs, mesh, rules)
+            b_sh = _batch_shardings(cfg, batch_sds, mesh, rules)
+            jitted = jax.jit(bundle.fn, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_sds, o_sds, batch_sds)
+        elif kind == "prefill":
+            fn, p_specs, p_sh, _ = step_lib.make_prefill(cfg, mesh, rules)
+            p_sds = shd.specs_to_sds(p_specs)
+            b_sh = _batch_shardings(cfg, batch_sds, mesh, rules)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_sds, batch_sds)
+        else:  # decode
+            fn, p_specs, p_sh, tok_sh, emb_sh = step_lib.make_decode_step(cfg, mesh, rules)
+            p_sds = shd.specs_to_sds(p_specs)
+            B = sh["batch"]
+            with shd.use_rules(rules, None):  # spec derivation only
+                state_sds = model.decode_state_specs(cfg, B, sh["seq"])
+            st_sh = step_lib.decode_state_shardings(cfg, state_sds, mesh, rules, B)
+            tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+            pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+            emb = (jax.ShapeDtypeStruct((B, cfg.d_model), cfg.compute_dtype)
+                   if cfg.frontend == "frames" else None)
+            tok_sh = NamedSharding(mesh, shd.shape_aware_spec((B,), ("batch",), mesh, rules))
+            emb_sh = NamedSharding(
+                mesh, shd.shape_aware_spec((B, cfg.d_model), ("batch", None), mesh, rules))
+            jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, tok_sh, st_sh,
+                                               emb_sh if emb is not None else None),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(p_sds, tok, pos, state_sds, emb)
+
+        rec["trace_s"] = round(time.time() - t0, 1)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0 - rec["trace_s"], 1)
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+            print("memory_analysis:", rec["memory"])
+        except Exception as e:  # noqa: BLE001 — backend may not support it
+            rec["memory"] = {"error": str(e)}
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and k in
+                       ("flops", "bytes accessed", "transcendentals",
+                        "bytes accessed output", "optimal_seconds")}
+        print("cost_analysis:", {k: human_count(v) for k, v in rec["cost"].items()})
+
+        coll = collective_bytes(compiled.as_text())
+        rec["collectives"] = coll
+        rl = roofline_from_compiled(compiled, chips, _model_flops(cfg, shape_id))
+        rec["roofline"] = rl.as_dict()
+        rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def cell_path(arch, shape_id, multi_pod, phi, tag="") -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    suffix = ("_phi" if phi else "") + (f"_{tag}" if tag else "")
+    return os.path.join(RESULTS, f"{arch}__{shape_id}__{mesh}{suffix}.json")
+
+
+def run_and_save(arch, shape_id, multi_pod, phi=False, force=False,
+                 rules_override=None, tag="", cfg_overrides=None,
+                 ocfg_overrides=None) -> dict:
+    path = cell_path(arch, shape_id, multi_pod, phi, tag)
+    if not force and os.path.exists(path):
+        rec = load_json(path)
+        if "error" not in rec:
+            log.info("cached: %s", os.path.basename(path))
+            return rec
+    try:
+        rec = run_cell(arch, shape_id, multi_pod, phi, rules_override, tag,
+                       cfg_overrides, ocfg_overrides)
+    except Exception as e:  # noqa: BLE001 — record failures for triage
+        rec = {"arch": arch, "shape": shape_id,
+               "mesh": "2x16x16" if multi_pod else "16x16", "phi": phi,
+               "tag": tag, "error": str(e),
+               "traceback": traceback.format_exc()[-4000:]}
+    dump_json(path, rec)
+    status = "SKIP" if "skipped" in rec else ("FAIL" if "error" in rec else "ok")
+    log.info("%s %s [%s]", os.path.basename(path), status,
+             rec.get("total_s", "-"))
+    if "roofline" in rec:
+        r = rec["roofline"]
+        log.info("  compute %.3fs memory %.3fs collective %.3fs -> %s (useful %.2f)",
+                 r["compute_s"], r["memory_s"], r["collective_s"], r["bottleneck"],
+                 r["useful_ratio"])
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--phi", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape_id in shapes:
+                rec = run_and_save(arch, shape_id, mp, args.phi, args.force)
+                failures += 1 if "error" in rec else 0
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""Training driver: mesh + data + checkpoint/restore + watchdog in one loop.
+
+CPU-runnable end-to-end with smoke configs:
+  PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On resume (same or different mesh) the loop restores params/opt state AND
+the data cursor, continuing bit-exactly (elastic restart path).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, LoaderState, Prefetcher, ShardedLoader
+from repro.distributed import sharding as shd
+from repro.distributed.watchdog import StepWatchdog
+from repro.models import model
+from repro.train import optimizer as opt
+from repro.train import step as step_lib
+from repro.utils import StepTimer, log
+
+
+def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
+               ckpt_dir: str | None = None, ckpt_every: int = 50,
+               mesh=None, seed: int = 0, log_every: int = 10):
+    rules = shd.TRAIN_RULES
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=global_batch, seed=seed)
+    loader = ShardedLoader(dcfg)
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+
+    if mesh is not None:
+        bundle, p_specs, o_specs, _ = step_lib.make_train_step(cfg, ocfg, mesh, rules)
+        p_sh = shd.specs_to_shardings(p_specs, mesh, rules)
+        o_sh = shd.specs_to_shardings(o_specs, mesh, rules)
+        step_fn = jax.jit(bundle.fn, in_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+    else:
+        p_specs = model.lm_specs(cfg)
+        p_sh = o_sh = None
+
+        def step_fn_(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(partial(model.train_loss, cfg))(params, batch)
+            new_params, new_opt = opt.apply_updates(params, grads, opt_state, ocfg)
+            return new_params, new_opt, loss
+
+        step_fn = jax.jit(step_fn_, donate_argnums=(0, 1))
+
+    params = shd.init_params(p_specs, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params, ocfg)
+    start_step = 0
+    if mgr is not None:
+        got = mgr.restore_latest({"params": params, "opt": opt_state},
+                                 {"params": p_sh, "opt": o_sh} if p_sh else None)
+        if got[0] is not None:
+            start_step, tree, extra = got
+            params, opt_state = tree["params"], tree["opt"]
+            loader.state = LoaderState.from_dict(extra.get("loader", {"step": 0}))
+            log.info("restored checkpoint @ step %d", start_step)
+
+    watchdog = StepWatchdog()
+    losses = []
+    it = iter(Prefetcher(iter(loader)))
+    for step in range(start_step, steps):
+        batch = next(it)
+        with StepTimer() as t:
+            params, opt_state, loss = step_fn(
+                params, opt_state,
+                {k: jnp.asarray(v) for k, v in batch.items()})
+            loss = float(loss)
+        losses.append(loss)
+        verdict = watchdog.record(t.history[-1] if t.history else 0.0)
+        # NB: save the CONSUMED cursor (step+1), not loader.state — the
+        # prefetcher runs ahead of consumption (caught by
+        # tests/test_fault_tolerance.py).
+        consumed = {"loader": {"step": step + 1}}
+        if verdict == "escalate" and mgr is not None:
+            mgr.save(step + 1, {"params": params, "opt": opt_state}, consumed)
+        if log_every and (step + 1) % log_every == 0:
+            log.info("step %d loss %.4f (median step %.3fs)", step + 1,
+                     float(np.mean(losses[-log_every:])), watchdog.median)
+        if mgr is not None and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state}, consumed)
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state},
+                 {"loader": {"step": steps}})
+        mgr.wait()
+    return params, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ocfg = opt.OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                         decay_steps=args.steps)
+    t0 = time.time()
+    _, losses = train_loop(cfg, ocfg, steps=args.steps, global_batch=args.batch,
+                           seq=args.seq, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every)
+    log.info("done: loss %.4f -> %.4f in %.1fs",
+             losses[0], float(np.mean(losses[-10:])), time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

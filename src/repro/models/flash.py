@@ -1,0 +1,166 @@
+"""Blockwise attention with a hand-written flash VJP (pure JAX).
+
+Why this exists (found via the dry-run roofline, see EXPERIMENTS.md §Perf):
+autodiff through a naive blockwise online-softmax forward emits, for every
+q-block, a *full-tensor* pad+add to accumulate dk/dv — O(nq · S · d) HBM
+traffic per layer. The textbook flash backward instead loops kv-major with
+block-local accumulators. This module implements exactly that:
+
+  forward : q-major online softmax; saves (q, k, v, out, lse) — O(S·d).
+  backward: Δ = Σ(do·o);
+            dq pass (q-major):  dqᵢ = Σⱼ [pᵢⱼ ∘ (doᵢvⱼᵀ − Δᵢ)] kⱼ · scale
+            dkv pass (kv-major): dvⱼ = Σᵢ pᵢⱼᵀ doᵢ ;  dkⱼ = Σᵢ dsᵢⱼᵀ qᵢ · scale
+            with pᵢⱼ = exp(qᵢkⱼᵀ·scale − lseᵢ) recomputed per block pair.
+
+Masking supports causal, sliding-window and chunked-local (llama4) in one
+implementation. All internal math f32; inputs/outputs in the caller's dtype.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int | None, chunk: int | None):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if chunk is not None:
+        m &= (kpos[None, :] // chunk) == (qpos[:, None] // chunk)
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    chunk: int | None = None, block_q: int = 512,
+                    block_kv: int = 1024):
+    """q, k, v: (B, S, H, D) with H already GQA-repeated. Returns (B, S, H, D)."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv):
+    B, S, H, D = q.shape
+    scale = D ** -0.5
+    bq, bkv = min(block_q, S), min(block_kv, S)
+    nq, nkv = S // bq, S // bkv
+    qt = jnp.moveaxis(q, 2, 1).astype(jnp.float32)   # (B, H, S, D)
+    kt = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
+
+    def q_block(iq):
+        qi = jax.lax.dynamic_slice_in_dim(qt, iq * bq, bq, 2) * scale
+        qpos = iq * bq + jnp.arange(bq)
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(kt, jk * bkv, bkv, 2)
+            vj = jax.lax.dynamic_slice_in_dim(vt, jk * bkv, bkv, 2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj)
+            kpos = jk * bkv + jnp.arange(bkv)
+            s = jnp.where(_mask(qpos, kpos, causal=causal, window=window,
+                                chunk=chunk)[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+            corr = jnp.exp(m - m_new)
+            corr = jnp.where(jnp.isnan(corr), 0.0, corr)
+            return (m_new, l * corr + p.sum(-1),
+                    acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj)), None
+
+        m0 = jnp.full((B, H, bq), -jnp.inf)
+        l0 = jnp.zeros((B, H, bq))
+        a0 = jnp.zeros((B, H, bq, D))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return o, lse
+
+    o, lse = jax.lax.map(q_block, jnp.arange(nq))    # (nq, B, H, bq, D/·)
+    o = jnp.moveaxis(o, 0, 2).reshape(B, H, S, D)
+    lse = jnp.moveaxis(lse, 0, 2).reshape(B, H, S)
+    return jnp.moveaxis(o, 1, 2).astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, block_q, block_kv):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, block_q, block_kv, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, D = q.shape
+    scale = D ** -0.5
+    bq, bkv = min(block_q, S), min(block_kv, S)
+    nq, nkv = S // bq, S // bkv
+    qt = jnp.moveaxis(q, 2, 1).astype(jnp.float32)
+    kt = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
+    dot_ = jnp.moveaxis(dout, 2, 1).astype(jnp.float32)
+    ot = jnp.moveaxis(out, 2, 1).astype(jnp.float32)
+    delta = (dot_ * ot).sum(-1)                      # (B, H, S)
+
+    def p_block(qi, lse_i, kj, qpos, kpos):
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj) * scale
+        p = jnp.exp(s - lse_i[..., None])
+        return jnp.where(_mask(qpos, kpos, causal=causal, window=window,
+                               chunk=chunk)[None, None], p, 0.0)
+
+    # ---- dq pass: q-major, block-local accumulator
+    def dq_block(iq):
+        qi = jax.lax.dynamic_slice_in_dim(qt, iq * bq, bq, 2)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, iq * bq, bq, 2)
+        do_i = jax.lax.dynamic_slice_in_dim(dot_, iq * bq, bq, 2)
+        dl_i = jax.lax.dynamic_slice_in_dim(delta, iq * bq, bq, 2)
+        qpos = iq * bq + jnp.arange(bq)
+
+        def kv_step(dq_i, jk):
+            kj = jax.lax.dynamic_slice_in_dim(kt, jk * bkv, bkv, 2)
+            vj = jax.lax.dynamic_slice_in_dim(vt, jk * bkv, bkv, 2)
+            kpos = jk * bkv + jnp.arange(bkv)
+            p = p_block(qi, lse_i, kj, qpos, kpos)
+            ds = p * (jnp.einsum("bhqd,bhkd->bhqk", do_i, vj) - dl_i[..., None])
+            return dq_i + jnp.einsum("bhqk,bhkd->bhqd", ds, kj) * scale, None
+
+        dq_i, _ = jax.lax.scan(kv_step, jnp.zeros((B, H, bq, D)), jnp.arange(nkv))
+        return dq_i
+
+    dq = jax.lax.map(dq_block, jnp.arange(nq))       # (nq, B, H, bq, D)
+    dq = jnp.moveaxis(dq, 0, 2).reshape(B, H, S, D)
+
+    # ---- dk/dv pass: kv-major, block-local accumulators
+    def dkv_block(jk):
+        kj = jax.lax.dynamic_slice_in_dim(kt, jk * bkv, bkv, 2)
+        vj = jax.lax.dynamic_slice_in_dim(vt, jk * bkv, bkv, 2)
+        kpos = jk * bkv + jnp.arange(bkv)
+
+        def q_step(carry, iq):
+            dk_j, dv_j = carry
+            qi = jax.lax.dynamic_slice_in_dim(qt, iq * bq, bq, 2)
+            lse_i = jax.lax.dynamic_slice_in_dim(lse, iq * bq, bq, 2)
+            do_i = jax.lax.dynamic_slice_in_dim(dot_, iq * bq, bq, 2)
+            dl_i = jax.lax.dynamic_slice_in_dim(delta, iq * bq, bq, 2)
+            qpos = iq * bq + jnp.arange(bq)
+            p = p_block(qi, lse_i, kj, qpos, kpos)
+            dv_j = dv_j + jnp.einsum("bhqk,bhqd->bhkd", p, do_i)
+            ds = p * (jnp.einsum("bhqd,bhkd->bhqk", do_i, vj) - dl_i[..., None])
+            dk_j = dk_j + jnp.einsum("bhqk,bhqd->bhkd", ds, qi) * scale
+            return (dk_j, dv_j), None
+
+        z = jnp.zeros((B, H, bkv, D))
+        (dk_j, dv_j), _ = jax.lax.scan(q_step, (z, z), jnp.arange(nq))
+        return dk_j, dv_j
+
+    dk, dv = jax.lax.map(dkv_block, jnp.arange(nkv))
+    dk = jnp.moveaxis(dk, 0, 2).reshape(B, H, S, D)
+    dv = jnp.moveaxis(dv, 0, 2).reshape(B, H, S, D)
+
+    back = lambda x: jnp.moveaxis(x, 1, 2).astype(q.dtype)
+    return back(dq), back(dk), back(dv)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

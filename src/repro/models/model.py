@@ -1,0 +1,436 @@
+"""LM facade: embeddings + decoder stack + head, for all assigned archs.
+
+Entry points (all pure functions of (cfg, params, batch)):
+  * ``train_logits``  — full-sequence forward for training / evaluation.
+  * ``train_loss``    — masked token cross-entropy (f32).
+  * ``prefill``       — forward that also returns decode state (KV caches /
+                        SSM states) and last-position logits.
+  * ``decode_step``   — one-token step against the decode state.
+
+Phi spiking mode (``cfg.spiking`` + ``cfg.phi``): every decoder GEMM operand
+is rate-coded into ``phi.timesteps`` binary spike trains by a local LIF
+neuron; each timestep's matmul is the Phi decomposition (L1 PWP retrieval +
+L2 ±1 COO correction) via ``kernels.ops.phi_matmul``. Given identical spikes,
+Phi mode is exact w.r.t. spiking-dense mode (the paper's losslessness claim,
+tested); rate-coded spiking itself approximates the analog model, as in all
+spiking-transformer work the paper evaluates.
+
+Modality frontends are stubs per the assignment: pixtral receives
+pre-computed patch embeddings, musicgen pre-computed (codebook-summed) frame
+embeddings; both enter the decoder as ordinary positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.patterns import PhiConfig
+from repro.distributed.sharding import ParamSpec, init_params, is_spec, shard
+from repro.kernels import ops as kops
+from repro.models import layers as ll
+from repro.models import mamba2, transformer
+from repro.models.config import ModelConfig
+from repro.snn.lif import LIFConfig, lif_update
+from repro.utils import cdiv
+
+
+# ------------------------------------------------------------------ specs ---
+def lm_specs(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    sp = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "fsdp"), dt, scale=0.02),
+        "head": ParamSpec((cfg.d_model, cfg.vocab), ("fsdp", "vocab"), dt),
+        "ln_f": ll.norm_spec(cfg),
+        "decoder": transformer.decoder_specs(cfg),
+    }
+    if cfg.phi is not None:
+        sp["decoder"] = _inject_phi_specs(cfg, sp["decoder"])
+    return sp
+
+
+_PHI_WEIGHTS = ("wq", "wk", "wv", "wo", "w1", "w2", "w3",
+                "wz", "wx", "wB", "wC", "wdt")
+
+
+def _inject_phi_specs(cfg: ModelConfig, tree: Any) -> Any:
+    """Add per-weight Phi state (patterns + PWP) next to each spiking GEMM."""
+    phi = cfg.phi
+
+    def eligible(v) -> bool:
+        if not is_spec(v) or v.shape[-2] % phi.k:
+            return False
+        # plain 2D GEMM weight, possibly layer-stacked (expert tensors are
+        # contracted by einsum, not the injectable mm — excluded by ndim/axes)
+        return len(v.shape) == 2 or (len(v.shape) == 3 and v.axes[0] == "layers")
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = dict(node)
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k in _PHI_WEIGHTS and eligible(v):
+                K, N = v.shape[-2], v.shape[-1]
+                T = K // phi.k
+                lead = v.shape[:-2]
+                lead_ax = v.axes[:-2]
+                # PWPs are 8× the weight bytes (the paper's memory-traffic
+                # challenge): shard the K-tile dim on 'pwp_tiles' (-> 'data',
+                # even in serve mode where weights replicate over data) and N
+                # on the weight's own N axis; shape_aware_spec drops
+                # duplicate mesh axes (e.g. w2's fsdp N under train rules).
+                entry = {
+                    "patterns": ParamSpec(
+                        lead + (T, phi.q, phi.k), lead_ax + ("pattern", None, None),
+                        jnp.int8, init="zeros"),
+                    "pwp": ParamSpec(
+                        lead + (T, phi.q + 1, N), lead_ax + ("pwp_tiles", None, v.axes[-1]),
+                        jnp.int8 if phi.pwp_int8 else cfg.param_dtype, init="zeros"),
+                }
+                if phi.pwp_int8:
+                    entry["pwp_scale"] = ParamSpec(
+                        lead + (T, phi.q + 1), lead_ax + ("pwp_tiles", None),
+                        jnp.float32, init="zeros")
+                out["phi_" + k] = entry
+        return out
+
+    return walk(tree)
+
+
+# ---------------------------------------------------------- spiking matmul ---
+# Logical (K, N) axes of every Phi-eligible weight — used to derive the
+# shard_map specs of the distributed spiking matmul.
+_WEIGHT_AXES = {
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"), "wv": ("fsdp", "kv_heads"),
+    "wo": ("heads", "fsdp"), "w1": ("fsdp", "mlp"), "w3": ("fsdp", "mlp"),
+    "w2": ("mlp", "fsdp"), "wz": ("fsdp", "heads"), "wx": ("fsdp", "heads"),
+    "wB": ("fsdp", "state"), "wC": ("fsdp", "state"), "wdt": ("fsdp", "heads"),
+}
+
+
+def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=None):
+    """Distributed Phi matmul under shard_map.
+
+    Column-parallel weights (K replicated): rows stay batch-sharded, PWP/W
+    N-sharded on 'model' — no communication. Row-parallel weights (K on
+    'model', e.g. wo/w2 in serve mode): each device computes the partial sum
+    of its K-tiles (its PWP slice + its COO columns) and a psum('model')
+    completes the reduction — the Phi analogue of Megatron row-parallelism.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import current_mesh, resolve_spec
+
+    mesh = current_mesh()
+    if mesh is None:
+        return kops.phi_matmul(spikes, w, patterns, pwp, impl="coo",
+                               nnz_budget=budget, gather_dtype=cfg.compute_dtype,
+                               pwp_scale=pwp_scale)
+    axes = _WEIGHT_AXES[name]
+
+    def _ax(logical, dim):
+        p = resolve_spec((logical,))
+        ax = p[0] if len(p) else None
+        if ax is None:
+            return None
+        names = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for nme in names:
+            size *= mesh.shape[nme]
+        return ax if dim % size == 0 else None  # divisibility fallback
+
+    k_ax = _ax(axes[0], w.shape[0])
+    n_ax = _ax(axes[1], w.shape[1])
+    bd = _ax("batch", spikes.shape[1])
+    # spikes = (T, B, …, K): timestep leads, batch is dim 1.
+    mid = (None,) * (spikes.ndim - 3)
+
+    def body(s_loc, w_loc, pats_loc, pwp_loc, scale_loc):
+        flat = s_loc.reshape(-1, s_loc.shape[-1])
+        out = kops.phi_matmul(flat, w_loc, pats_loc, pwp_loc, impl="coo",
+                              nnz_budget=budget, gather_dtype=cfg.compute_dtype,
+                              pwp_scale=scale_loc)
+        if k_ax is not None:
+            out = jax.lax.psum(out, k_ax)
+        return out.reshape(s_loc.shape[:-1] + (w_loc.shape[-1],))
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, bd, *mid, k_ax), P(k_ax, n_ax),
+                  P(k_ax, None, None), P(k_ax, None, n_ax),
+                  P(k_ax, None) if pwp_scale is not None else None),
+        out_specs=P(None, bd, *mid, n_ax),
+        check_vma=False,
+    )(spikes, w, patterns, pwp, pwp_scale)
+
+
+def make_matmul(cfg: ModelConfig):
+    """Returns the GEMM implementation for this config (dense / spiking-Phi)."""
+    if not cfg.spiking:
+        return None  # default dense mm
+
+    phi = cfg.phi or PhiConfig()
+    lif = LIFConfig(decay=0.5, threshold=1.0)
+    spike_impl = getattr(cfg, "spike_impl", "phi")
+
+    def mm(x: jax.Array, p: dict, name: str) -> jax.Array:
+        w = p[name]
+        phi_p = p.get("phi_" + name)
+        # Rate-code the operand into T binary spike trains (local LIF).
+        xf = x.astype(jnp.float32)
+
+        def step(v, _):
+            s, v2 = lif_update(v, xf, lif)
+            return v2, s
+
+        _, spikes = jax.lax.scan(step, jnp.zeros_like(xf), None, length=phi.timesteps)
+        # spikes: (T, ..., K)
+        if phi_p is None:
+            out = jnp.einsum("t...k,kn->t...n", spikes.astype(cfg.compute_dtype),
+                             w.astype(cfg.compute_dtype))
+        elif spike_impl != "phi":
+            out = kops.phi_matmul(spikes, w.astype(jnp.float32), phi_p["patterns"],
+                                  phi_p["pwp"].astype(jnp.float32), impl="ref")
+        else:
+            pwp_v = phi_p["pwp"]
+            if pwp_v.dtype != jnp.int8:
+                pwp_v = pwp_v.astype(jnp.float32)
+            out = _phi_sharded_matmul(
+                cfg, spikes, w.astype(jnp.float32), phi_p["patterns"],
+                pwp_v, name, phi.nnz_budget, pwp_scale=phi_p.get("pwp_scale"))
+        # rate decoding: average over timesteps, rescale by threshold
+        return (out.mean(0) * (2.0 * lif.threshold)).astype(x.dtype)
+
+    return mm
+
+
+def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict:
+    """Fill the zero-initialised Phi state from real spike statistics.
+
+    The capture pass runs the forward with an instrumented matmul that emits
+    each GEMM's spike trains through ``io_callback``. Under scan-over-layers
+    each traced call site fires once per layer iteration, so the captured
+    list per call site holds every layer's spikes; patterns are calibrated on
+    the pooled spikes (shared across a stack's layers — PWPs are still
+    per-layer via vmap against each layer's weights). Call sites are keyed by
+    (weight name, occurrence), which matches the parameter-tree traversal
+    order by construction (both follow dict insertion order).
+    """
+    import numpy as np
+    from jax.experimental import io_callback
+    from repro.core.patterns import calibrate as _calib, pattern_weight_products
+
+    captured: dict[str, list] = {}
+    trace_counter: dict[str, int] = {}
+    stats: dict[str, Any] = {}
+    lif = LIFConfig()
+    phi = cfg.phi
+
+    def capture_mm(x, p, name):
+        w = p[name]
+        if "phi_" + name in p:
+            key = f"{name}#{trace_counter.get(name, 0)}"
+            trace_counter[name] = trace_counter.get(name, 0) + 1
+            xf = x.astype(jnp.float32)
+
+            def step(v, _):
+                s, v2 = lif_update(v, xf, lif)
+                return v2, s
+
+            _, spikes = jax.lax.scan(step, jnp.zeros_like(xf), None, length=phi.timesteps)
+            io_callback(
+                lambda s, key=key: captured.setdefault(key, []).append(np.asarray(s)),
+                None, spikes, ordered=True)
+        return x @ w.astype(x.dtype)
+
+    # capture pass (dense math, spike stats only)
+    _forward(cfg.with_(spiking=False), params, sample_batch, matmul=capture_mm)
+
+    walk_counter: dict[str, int] = {}
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = dict(node)
+        for k, v in list(node.items()):
+            if isinstance(v, dict) and not k.startswith("phi_"):
+                out[k] = walk(v)
+            if "phi_" + k in node:
+                key = f"{k}#{walk_counter.get(k, 0)}"
+                walk_counter[k] = walk_counter.get(k, 0) + 1
+                if key not in captured:
+                    continue
+                w = np.asarray(node[k], np.float32)
+                spk = np.concatenate([s.reshape(-1, w.shape[-2]) for s in captured[key]])
+                pats = _calib(spk, phi)
+                if w.ndim == 2:
+                    pwp = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w))
+                else:  # stacked layers: pooled patterns, per-layer PWPs
+                    pwp = jax.vmap(
+                        lambda wl: pattern_weight_products(jnp.asarray(pats), wl)
+                    )(jnp.asarray(w))
+                    pats = np.broadcast_to(pats, (w.shape[0],) + pats.shape)
+                from repro.core.assign import phi_stats
+                stats[key] = phi_stats(spk, pats[0] if pats.ndim == 4 else pats)
+                out["phi_" + k] = {
+                    "patterns": jnp.asarray(pats, jnp.int8),
+                    "pwp": jnp.asarray(pwp, cfg.param_dtype),
+                }
+        return out
+
+    new_params = walk(params)
+    return new_params, stats
+
+
+# ---------------------------------------------------------------- forward ---
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Token + stub-frontend embedding -> (B, S_total, D) in compute dtype."""
+    parts = []
+    if cfg.frontend == "patches":
+        parts.append(batch["patch_embeds"].astype(cfg.compute_dtype))
+    if cfg.frontend == "frames":
+        x = batch["frame_embeds"].astype(cfg.compute_dtype)
+        return shard(x, "batch", "seq", "act_embed")
+    tok = params["embed"][batch["tokens"]].astype(cfg.compute_dtype)
+    parts.append(tok)
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = ll.apply_norm(cfg, params["ln_f"], x)
+    logits = x.astype(cfg.compute_dtype) @ params["head"].astype(cfg.compute_dtype)
+    return shard(logits.astype(jnp.float32), "batch", "seq", "act_vocab")
+
+
+def _forward(cfg: ModelConfig, params: dict, batch: dict, matmul=None,
+             want_cache: bool = False):
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mm = matmul if matmul is not None else make_matmul(cfg)
+    x, caches = transformer.stack_prefill(cfg, params["decoder"], x, positions,
+                                          matmul=mm, want_cache=want_cache)
+    return x, caches
+
+
+def train_logits(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    x, _ = _forward(cfg, params, batch)
+    return _logits(cfg, params, x)
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Masked next-token cross-entropy. labels: (B, S_total) int32, -1 = pad."""
+    logits = train_logits(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    take = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(take * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict):
+    """Returns (last-position logits (B, V), decode state)."""
+    x, caches = _forward(cfg, params, batch, want_cache=True)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos: jax.Array,
+                caches, embeds: jax.Array | None = None):
+    """token (B,) int32 (or embeds (B, D) for frame frontends); pos (B,) int32."""
+    if embeds is not None:
+        x = embeds[:, None].astype(cfg.compute_dtype)
+    else:
+        x = params["embed"][token][:, None].astype(cfg.compute_dtype)
+    x = shard(x, "batch", None, "act_embed")
+    mm = make_matmul(cfg)
+    x, new_caches = transformer.stack_decode(cfg, params["decoder"], x, pos, caches,
+                                             matmul=mm)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_caches
+
+
+# ----------------------------------------------------------- input specs ---
+def input_batch_specs(cfg: ModelConfig, batch: int, seq: int, with_labels: bool,
+                      dtype=jnp.int32) -> dict:
+    """ShapeDtypeStruct stand-ins for a model input batch (dry-run pattern)."""
+    sp: dict = {}
+    if cfg.frontend == "patches":
+        P = cfg.frontend_positions
+        sp["tokens"] = jax.ShapeDtypeStruct((batch, seq - P), dtype)
+        sp["patch_embeds"] = jax.ShapeDtypeStruct((batch, P, cfg.d_model), cfg.compute_dtype)
+    elif cfg.frontend == "frames":
+        sp["frame_embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.compute_dtype)
+    else:
+        sp["tokens"] = jax.ShapeDtypeStruct((batch, seq), dtype)
+    if with_labels:
+        sp["labels"] = jax.ShapeDtypeStruct((batch, seq), dtype)
+    return sp
+
+
+def dummy_batch(cfg: ModelConfig, batch: int, seq: int, with_labels: bool,
+                key: jax.Array | None = None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for k, s in input_batch_specs(cfg, batch, seq, with_labels).items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = 2 if k == "labels" else cfg.vocab
+            out[k] = jax.random.randint(key, s.shape, 0, min(hi, cfg.vocab), s.dtype)
+        else:
+            out[k] = jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype) * 0.5
+    return out
+
+
+def extend_caches(cfg: ModelConfig, caches: Any, new_len: int) -> Any:
+    """Grow linear KV caches to ``new_len`` slots (ring caches stay fixed).
+
+    Prefill returns caches sized to the prompt; the serving engine extends
+    them to the generation budget before decoding.
+    """
+
+    def pad_kv(kv, win):
+        k, v = kv
+        cur = k.shape[-3]
+        target = min(new_len, win) if win is not None else new_len
+        if target <= cur:
+            return (k, v)
+        pad = [(0, 0)] * k.ndim
+        pad[-3] = (0, target - cur)
+        return (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    if cfg.family == "ssm":
+        return caches
+    if cfg.family == "hybrid":
+        out = dict(caches)
+        out["kv"] = pad_kv(caches["kv"], None)
+        return out
+    g = transformer.group_size(cfg)
+    return tuple(
+        pad_kv(caches[i], transformer._cache_window(cfg, cfg.is_global_layer(i)))
+        for i in range(g)
+    )
+
+
+# ------------------------------------------------------------ cache specs ---
+def decode_state_specs(cfg: ModelConfig, batch: int, context: int) -> Any:
+    """ShapeDtypeStruct tree matching what ``prefill`` returns — derived via
+    ``jax.eval_shape`` on prefill itself so it can never drift."""
+    from repro.distributed.sharding import specs_to_sds
+
+    params_sds = specs_to_sds(lm_specs(cfg))
+    batch_sds = input_batch_specs(cfg, batch, context, with_labels=False)
+    out = jax.eval_shape(partial(prefill, cfg), params_sds, batch_sds)
+    return out[1]
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, context: int) -> Any:
+    """Concrete zero-initialised decode state (serving engine cold start)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_state_specs(cfg, batch, context),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

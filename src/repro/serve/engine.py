@@ -1,0 +1,141 @@
+"""Continuous-batching serving engine (vLLM-lite for this framework).
+
+A fixed pool of ``batch_slots`` decode lanes over one batched decode-state
+tree. Per tick:
+  1. admit queued requests into free slots — each prompt is prefilled
+     (batch=1) and its caches are spliced into the batched state at the slot
+     index (every state leaf has batch at axis 1, so one dynamic_update_slice
+     rule covers KV caches, SSM states and conv states uniformly);
+  2. one fused ``decode_step`` advances *all* active slots;
+  3. finished slots (EOS / budget) emit results and free up.
+
+SWA/chunked archs use ring caches, so slot memory is O(window), not O(ctx).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.serve.sampling import sample
+from repro.utils import log
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # prompt tokens (P,)
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: list[int]
+    prompt_len: int
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
+                 max_context: int = 512, eos_id: int = 2, seed: int = 0):
+        assert cfg.frontend == "none", "engine serves token-in token-out archs"
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_context = max_context
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+
+        self.state = model.init_decode_state(cfg, batch_slots, max_context)
+        self.pos = np.zeros(batch_slots, np.int64)
+        self.active = np.zeros(batch_slots, bool)
+        self.budget = np.zeros(batch_slots, np.int64)
+        self.out_tokens: list[list[int]] = [[] for _ in range(batch_slots)]
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.queue: list[Request] = []
+        self.results: list[Result] = []
+        self.ticks = 0
+        self.decoded_tokens = 0
+
+        self._decode = jax.jit(partial(model.decode_step, cfg))
+        self._prefill = jax.jit(partial(model.prefill, cfg))
+        self._insert = jax.jit(self._insert_impl)
+
+    # ------------------------------------------------------------- plumbing
+    @staticmethod
+    def _insert_impl(state, new_state, slot):
+        def put(c, n):
+            idx = (jnp.zeros((), jnp.int32),) * 1 + (slot,) + \
+                  (jnp.zeros((), jnp.int32),) * (c.ndim - 2)
+            return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), idx)
+
+        return jax.tree.map(put, state, new_state)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ----------------------------------------------------------------- tick
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = np.asarray(req.tokens, np.int32)[None, :]
+            logits, new_state = self._prefill(self.params, {"tokens": jnp.asarray(prompt)})
+            new_state = model.extend_caches(self.cfg, new_state, self.max_context)
+            self.state = self._insert(self.state, new_state, jnp.int32(slot))
+            self.key, sk = jax.random.split(self.key)
+            first = sample(logits, sk, temperature=req.temperature)
+            self.out_tokens[slot] = [int(first[0])]
+            self.pos[slot] = prompt.shape[1]
+            self.budget[slot] = req.max_new_tokens
+            self.active[slot] = True
+            self.slot_req[slot] = req
+
+    def _retire(self) -> None:
+        for slot in range(self.B):
+            if not self.active[slot]:
+                continue
+            toks = self.out_tokens[slot]
+            done = len(toks) >= self.budget[slot] or (toks and toks[-1] == self.eos_id)
+            if done or self.pos[slot] >= self.max_context - 1:
+                req = self.slot_req[slot]
+                self.results.append(Result(req.rid, list(toks), len(req.tokens)))
+                self.active[slot] = False
+                self.slot_req[slot] = None
+
+    def tick(self) -> bool:
+        """One engine iteration; returns False when fully idle."""
+        self._admit()
+        if not self.active.any():
+            return bool(self.queue)
+        last = np.array([self.out_tokens[b][-1] if self.active[b] else 0
+                         for b in range(self.B)], np.int32)
+        pos = jnp.asarray(self.pos.astype(np.int32))
+        logits, self.state = self._decode(self.params, jnp.asarray(last), pos, self.state)
+        self.key, sk = jax.random.split(self.key)
+        temp = max((r.temperature for r in self.slot_req if r), default=0.0)
+        nxt = np.asarray(sample(logits, sk, temperature=temp))
+        for b in range(self.B):
+            if self.active[b]:
+                self.out_tokens[b].append(int(nxt[b]))
+                self.pos[b] += 1
+                self.decoded_tokens += 1
+        self.ticks += 1
+        self._retire()
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> list[Result]:
+        while self.tick() or self.queue or self.active.any():
+            if self.ticks >= max_ticks:
+                break
+            if not self.queue and not self.active.any():
+                break
+        return self.results

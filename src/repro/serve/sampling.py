@@ -1,0 +1,18 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if temperature <= 0.0:
+        return logits.argmax(-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, idx = jax.lax.top_k(logits, top_k)
+        draw = jax.random.categorical(key, vals)
+        return jnp.take_along_axis(idx, draw[:, None], 1)[:, 0].astype(jnp.int32)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

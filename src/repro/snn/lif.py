@@ -1,0 +1,65 @@
+"""LIF neurons with surrogate-gradient training support.
+
+Forward: the paper's LIF model (integrate, fire at threshold, reset).
+Backward: arctan surrogate (standard in Spikformer/SDT training), attached via
+``jax.custom_vjp`` to the Heaviside firing function. The Pallas ``lif`` kernel
+is the inference fast path; training uses this differentiable formulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    decay: float = 0.5        # membrane leak (tau = 2 in spikingjelly terms)
+    threshold: float = 1.0
+    alpha: float = 2.0        # surrogate sharpness
+    reset: str = "hard"       # "hard" | "soft"
+    detach_reset: bool = True  # stop-grad through the reset path (standard)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike_fn(v_over: jax.Array, alpha: float) -> jax.Array:
+    """Heaviside(v − θ) with arctan surrogate gradient."""
+    return (v_over >= 0.0).astype(v_over.dtype)
+
+
+def _spike_fwd(v_over, alpha):
+    return spike_fn(v_over, alpha), v_over
+
+
+def _spike_bwd(alpha, v_over, g):
+    surr = alpha / 2.0 / (1.0 + (jnp.pi / 2.0 * alpha * v_over) ** 2)
+    return (g * surr,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_update(v: jax.Array, x: jax.Array, cfg: LIFConfig) -> tuple[jax.Array, jax.Array]:
+    """One differentiable LIF step. Returns (spike, v')."""
+    v_int = v * cfg.decay + x
+    s = spike_fn(v_int - cfg.threshold, cfg.alpha)
+    s_reset = jax.lax.stop_gradient(s) if cfg.detach_reset else s
+    if cfg.reset == "hard":
+        v_new = v_int * (1.0 - s_reset)
+    else:
+        v_new = v_int - cfg.threshold * s_reset
+    return s, v_new
+
+
+def lif_sequence(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
+    """Run LIF over a leading time axis: (T, ...) currents -> (T, ...) spikes."""
+
+    def step(v, x):
+        s, v_new = lif_update(v, x, cfg)
+        return v_new, s
+
+    v0 = jnp.zeros_like(x_seq[0])
+    _, spikes = jax.lax.scan(step, v0, x_seq)
+    return spikes

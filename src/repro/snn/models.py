@@ -1,0 +1,269 @@
+"""Spiking models for the paper-side evaluation (VGG/ResNet/Spikformer family).
+
+Functional JAX modules (init/apply pairs). Every perf-critical matmul operand
+is a spike tensor; ``apply(..., capture=True)`` additionally returns the
+binary activation matrices in **GEMM layout** (rows × K) — conv layers via
+im2col — which is exactly what Phi calibration, PAFT, and the op-count model
+consume. ``phi_apply`` runs inference with the calibrated Phi decomposition
+(`ops.phi_matmul`) in place of every dense matmul; without PAFT this is
+bit-exact with ``apply`` (the paper's losslessness claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import PhiConfig, calibrate, pattern_weight_products
+from repro.kernels import ops
+from repro.snn.lif import LIFConfig, lif_sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    kind: str = "vgg"            # "mlp" | "vgg" | "resnet" | "spikformer"
+    num_classes: int = 10
+    timesteps: int = 4
+    input_size: int = 16
+    input_channels: int = 3
+    widths: tuple[int, ...] = (32, 64, 128)
+    dim: int = 128               # spikformer embed dim
+    heads: int = 4
+    blocks: int = 2
+    lif: LIFConfig = LIFConfig()
+    phi: PhiConfig = PhiConfig()
+
+
+Params = dict[str, Any]
+
+
+def _dense_init(key, k_in, n_out, scale=None):
+    scale = scale or (2.0 / k_in) ** 0.5
+    return {"w": jax.random.normal(key, (k_in, n_out), jnp.float32) * scale}
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = (2.0 / (kh * kw * cin)) ** 0.5
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale}
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, pad: str = "SAME") -> jax.Array:
+    """(..., H, W, C) -> (..., H', W', kh·kw·C) patches (GEMM layout for conv)."""
+    lead = x.shape[:-3]
+    xb = x.reshape((-1,) + x.shape[-3:])
+    patches = jax.lax.conv_general_dilated_patches(
+        xb, (kh, kw), (stride, stride), pad, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return patches.reshape(lead + patches.shape[1:])
+
+
+def conv_as_gemm(spikes: jax.Array, w: jax.Array, stride: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Spiking conv as im2col GEMM. Returns (output, gemm_activations)."""
+    kh, kw, cin, cout = w.shape
+    cols = im2col(spikes, kh, kw, stride)             # (..., H', W', kh·kw·cin)
+    out = cols @ w.reshape(kh * kw * cin, cout)
+    return out, cols
+
+
+# ------------------------------------------------------------------ builds ---
+def init(cfg: SNNConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 64)
+    ki = iter(range(64))
+    p: Params = {}
+    if cfg.kind == "mlp":
+        d_in = cfg.input_size * cfg.input_size * cfg.input_channels
+        dims = (d_in,) + cfg.widths
+        for i in range(len(cfg.widths)):
+            p[f"fc{i}"] = _dense_init(keys[next(ki)], dims[i], dims[i + 1])
+        p["head"] = _dense_init(keys[next(ki)], dims[-1], cfg.num_classes)
+    elif cfg.kind in ("vgg", "resnet"):
+        cin = cfg.input_channels
+        for i, cout in enumerate(cfg.widths):
+            p[f"conv{i}"] = _conv_init(keys[next(ki)], 3, 3, cin, cout)
+            if cfg.kind == "resnet" and i > 0:
+                p[f"conv{i}b"] = _conv_init(keys[next(ki)], 3, 3, cout, cout)
+            cin = cout
+        feat = cfg.widths[-1]
+        p["head"] = _dense_init(keys[next(ki)], feat, cfg.num_classes)
+    elif cfg.kind == "spikformer":
+        d_in = cfg.input_channels * 16  # 4x4 patches
+        p["embed"] = _dense_init(keys[next(ki)], d_in, cfg.dim)
+        for b in range(cfg.blocks):
+            p[f"b{b}_qkv"] = _dense_init(keys[next(ki)], cfg.dim, 3 * cfg.dim)
+            p[f"b{b}_proj"] = _dense_init(keys[next(ki)], cfg.dim, cfg.dim)
+            p[f"b{b}_fc1"] = _dense_init(keys[next(ki)], cfg.dim, 4 * cfg.dim)
+            p[f"b{b}_fc2"] = _dense_init(keys[next(ki)], 4 * cfg.dim, cfg.dim)
+        p["head"] = _dense_init(keys[next(ki)], cfg.dim, cfg.num_classes)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+# ----------------------------------------------------------------- forward ---
+def _maybe_capture(cap: dict | None, name: str, act: jax.Array, k: int) -> None:
+    if cap is not None:
+        cap[name] = act.reshape(-1, act.shape[-1])[:, : (act.shape[-1] // k) * k]
+
+
+MatmulFn = Callable[[jax.Array, jax.Array, str], jax.Array]
+
+
+def _plain_matmul(a: jax.Array, w: jax.Array, name: str) -> jax.Array:
+    return a @ w
+
+
+def apply(
+    params: Params,
+    cfg: SNNConfig,
+    x: jax.Array,
+    *,
+    capture: dict | None = None,
+    matmul: MatmulFn = _plain_matmul,
+) -> jax.Array:
+    """Forward pass. x: (B,H,W,C) images or (B,T,H,W,C) event frames.
+
+    Returns logits (B, classes). ``matmul`` is the injection point for Phi:
+    it receives (spike_activations, weight, layer_name) for every spiking GEMM.
+    """
+    T = cfg.timesteps
+    if x.ndim == 5:  # event stream: (B, T, H, W, C) — use frames as timesteps
+        xs = jnp.moveaxis(x, 1, 0)
+    else:  # direct coding: repeat analog input T times (standard practice)
+        xs = jnp.broadcast_to(x[None], (T,) + x.shape)
+
+    lif = cfg.lif
+
+    def spiking_linear(h_seq, w, name):
+        s = lif_sequence(h_seq, lif)
+        _maybe_capture(capture, name, s, cfg.phi.k)
+        return matmul(s, w, name)
+
+    if cfg.kind == "mlp":
+        h = xs.reshape(T, -1, cfg.input_size * cfg.input_size * cfg.input_channels)
+        h = h @ params["fc0"]["w"]  # first layer sees analog input (encoder)
+        i = 1
+        while f"fc{i}" in params:
+            h = spiking_linear(h, params[f"fc{i}"]["w"], f"fc{i}")
+            i += 1
+        h = spiking_linear(h, params["head"]["w"], "head")
+        return h.mean(0)
+
+    if cfg.kind in ("vgg", "resnet"):
+        h = xs  # (T, B, H, W, C)
+        for i in range(len(cfg.widths)):
+            w = params[f"conv{i}"]["w"]
+            kh, kw, cin, cout = w.shape
+            if i == 0:  # encoder conv on analog input
+                cols = im2col(h, kh, kw, 1)
+                h = cols @ w.reshape(-1, cout)
+            else:
+                s = lif_sequence(h, lif)
+                cols = im2col(s, kh, kw, 1)
+                _maybe_capture(capture, f"conv{i}", cols, cfg.phi.k)
+                h = matmul(cols, w.reshape(-1, cout), f"conv{i}")
+                if cfg.kind == "resnet" and f"conv{i}b" in params:
+                    s2 = lif_sequence(h, lif)
+                    cols2 = im2col(s2, kh, kw, 1)
+                    _maybe_capture(capture, f"conv{i}b", cols2, cfg.phi.k)
+                    h = h + matmul(cols2, params[f"conv{i}b"]["w"].reshape(-1, cout), f"conv{i}b")
+            # 2x2 avg pool
+            Tb = h.shape[:2]
+            hb = h.reshape((-1,) + h.shape[2:])
+            hb = jax.lax.reduce_window(hb, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+            h = hb.reshape(Tb + hb.shape[1:])
+        h = h.mean(axis=(2, 3))  # global average pool -> (T, B, feat)
+        h = spiking_linear(h, params["head"]["w"], "head")
+        return h.mean(0)
+
+    if cfg.kind == "spikformer":
+        B = x.shape[0] if x.ndim == 4 else x.shape[0]
+        # 4x4 patchify
+        hw = cfg.input_size // 4
+        h = xs.reshape(T, B, hw, 4, hw, 4, cfg.input_channels)
+        h = h.transpose(0, 1, 2, 4, 3, 5, 6).reshape(T, B, hw * hw, -1)
+        h = h @ params["embed"]["w"]  # (T, B, S, D)
+        D, H = cfg.dim, cfg.heads
+        for b in range(cfg.blocks):
+            s = lif_sequence(h, lif)
+            _maybe_capture(capture, f"b{b}_qkv", s, cfg.phi.k)
+            qkv = matmul(s, params[f"b{b}_qkv"]["w"], f"b{b}_qkv")
+            q, k_, v = jnp.split(qkv, 3, axis=-1)
+
+            def heads(z):
+                return z.reshape(T, B, -1, H, D // H).transpose(0, 1, 3, 2, 4)
+
+            q, k_, v = lif_sequence(heads(q), lif), lif_sequence(heads(k_), lif), lif_sequence(heads(v), lif)
+            attn = (q @ k_.transpose(0, 1, 2, 4, 3)) @ v * (0.125)  # spiking SA: no softmax
+            attn = attn.transpose(0, 1, 3, 2, 4).reshape(T, B, -1, D)
+            sa = lif_sequence(attn, lif)
+            _maybe_capture(capture, f"b{b}_proj", sa, cfg.phi.k)
+            h = h + matmul(sa, params[f"b{b}_proj"]["w"], f"b{b}_proj")
+            s1 = lif_sequence(h, lif)
+            _maybe_capture(capture, f"b{b}_fc1", s1, cfg.phi.k)
+            m = matmul(s1, params[f"b{b}_fc1"]["w"], f"b{b}_fc1")
+            s2 = lif_sequence(m, lif)
+            _maybe_capture(capture, f"b{b}_fc2", s2, cfg.phi.k)
+            h = h + matmul(s2, params[f"b{b}_fc2"]["w"], f"b{b}_fc2")
+        h = h.mean(2)  # (T, B, D)
+        s = lif_sequence(h, lif)
+        _maybe_capture(capture, "head", s, cfg.phi.k)
+        return matmul(s, params["head"]["w"], "head").mean(0)
+
+    raise ValueError(cfg.kind)
+
+
+# -------------------------------------------------------------- Phi engine ---
+@dataclasses.dataclass
+class PhiState:
+    """Calibrated Phi state: per-layer patterns and PWPs."""
+
+    patterns: dict[str, np.ndarray]
+    pwp: dict[str, jax.Array]
+
+
+def calibrate_model(
+    params: Params, cfg: SNNConfig, calib_x: jax.Array
+) -> tuple[PhiState, dict[str, np.ndarray]]:
+    """Run the Phi calibration stage on a calibration batch.
+
+    Returns (PhiState, captured spike activations in GEMM layout).
+    """
+    cap: dict[str, jax.Array] = {}
+    apply(params, cfg, calib_x, capture=cap)
+    acts = {k: np.asarray(v) for k, v in cap.items()}
+    patterns, pwps = {}, {}
+    for name, act in acts.items():
+        pats = calibrate(act, cfg.phi)
+        w = _layer_weight(params, name)
+        K = pats.shape[0] * cfg.phi.k
+        patterns[name] = pats
+        pwps[name] = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w[:K]))
+    return PhiState(patterns, pwps), acts
+
+
+def _layer_weight(params: Params, name: str) -> np.ndarray:
+    w = params[name]["w"]
+    if w.ndim == 4:
+        w = w.reshape(-1, w.shape[-1])
+    return np.asarray(w)
+
+
+def phi_apply(
+    params: Params, cfg: SNNConfig, phi: PhiState, x: jax.Array, impl: str = "coo"
+) -> jax.Array:
+    """Inference with Phi sparse matmuls substituted for every spiking GEMM."""
+
+    def phi_mm(a, w, name):
+        if name not in phi.patterns:
+            return a @ w
+        pats = jnp.asarray(phi.patterns[name])
+        K = pats.shape[0] * cfg.phi.k
+        out = ops.phi_matmul(a[..., :K], w[:K], pats, phi.pwp[name], impl=impl)
+        if K < a.shape[-1]:  # ragged tail handled densely
+            out = out + a[..., K:] @ w[K:]
+        return out.astype(w.dtype)
+
+    return apply(params, cfg, x, matmul=phi_mm)

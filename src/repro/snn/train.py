@@ -1,0 +1,91 @@
+"""Surrogate-gradient training loop for the spiking models."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.snn import models
+from repro.snn.models import SNNConfig
+from repro.train import optimizer as opt
+from repro.utils import log
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def make_train_step(cfg: SNNConfig, ocfg: opt.OptConfig,
+                    regularizer: Callable | None = None):
+    """Build a jitted train step.
+
+    ``regularizer(params, captured_spikes)`` adds the PAFT loss computed from
+    the spike activations captured during the same forward pass (no second
+    forward).
+    """
+
+    def loss_fn(params, x, y):
+        cap: dict | None = {} if regularizer is not None else None
+        logits = models.apply(params, cfg, x, capture=cap)
+        loss = cross_entropy(logits, y)
+        reg = regularizer(params, cap) if regularizer is not None else 0.0
+        acc = (logits.argmax(-1) == y).mean()
+        return loss + reg, (loss, acc)
+
+    @jax.jit
+    def step(params, state, x, y):
+        grads, (loss, acc) = jax.grad(loss_fn, has_aux=True)(params, x, y)
+        new_params, new_state = opt.apply_updates(params, grads, state, ocfg)
+        return new_params, new_state, loss, acc
+
+    return step
+
+
+def train(
+    cfg: SNNConfig,
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    steps: int = 200,
+    batch: int = 64,
+    ocfg: opt.OptConfig | None = None,
+    seed: int = 0,
+    regularizer: Callable | None = None,
+    params=None,
+    log_every: int = 50,
+):
+    """Train a spiking model on (x, y); returns (params, history)."""
+    ocfg = ocfg or opt.OptConfig(lr=1e-3, warmup_steps=20, decay_steps=steps, weight_decay=1e-4)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = models.init(cfg, key)
+    state = opt.init({k: v for k, v in params.items() if isinstance(v, dict)}, ocfg)
+    # optimizer state only over weight sub-trees
+    step_fn = make_train_step(cfg, ocfg, regularizer)
+    hist = []
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    weights = {k: v for k, v in params.items() if isinstance(v, dict)}
+    for i in range(steps):
+        sl = rng.integers(0, n, batch)
+        weights, state, loss, acc = step_fn(weights, state, jnp.asarray(x[sl]), jnp.asarray(y[sl]))
+        hist.append((float(loss), float(acc)))
+        if log_every and (i + 1) % log_every == 0:
+            la = np.mean([h[0] for h in hist[-log_every:]]), np.mean([h[1] for h in hist[-log_every:]])
+            log.info("snn step %d loss %.4f acc %.3f", i + 1, la[0], la[1])
+    out = dict(params)
+    out.update(weights)
+    return out, hist
+
+
+def evaluate(params, cfg: SNNConfig, x: np.ndarray, y: np.ndarray, batch: int = 256) -> float:
+    correct = 0
+    apply_j = jax.jit(functools.partial(models.apply, cfg=cfg))
+    for i in range(0, len(x), batch):
+        logits = apply_j(params, x=jnp.asarray(x[i : i + batch]))
+        correct += int((np.asarray(logits).argmax(-1) == y[i : i + batch]).sum())
+    return correct / len(x)

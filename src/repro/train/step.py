@@ -1,0 +1,165 @@
+"""Distributed train/serve step builders: pjit wiring for every config.
+
+Produces jit-able functions plus the in/out shardings resolved from the
+logical-axis rules — the single integration point used by the trainer, the
+serving engine, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+# ----------------------------------------------------------- opt state specs
+def opt_state_specs(param_specs: Any, ocfg: opt.OptConfig) -> dict:
+    """ParamSpec tree for the optimizer state (so it shards like params)."""
+
+    def m_spec(s: shd.ParamSpec) -> shd.ParamSpec:
+        return shd.ParamSpec(s.shape, s.axes, jnp.float32, init="zeros")
+
+    def v_spec(s: shd.ParamSpec):
+        if ocfg.factored and len(s.shape) >= 2:
+            return {
+                "vr": shd.ParamSpec(s.shape[:-1], s.axes[:-1], jnp.float32, init="zeros"),
+                "vc": shd.ParamSpec(s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:],
+                                    jnp.float32, init="zeros"),
+            }
+        return m_spec(s)
+
+    out = {
+        "step": shd.ParamSpec((), (), jnp.int32, init="zeros"),
+        "m": jax.tree.map(m_spec, param_specs, is_leaf=shd.is_spec),
+        "v": jax.tree.map(v_spec, param_specs, is_leaf=shd.is_spec),
+    }
+    if ocfg.grad_compress:  # error-feedback residual, replicated across pods
+        out["ef"] = jax.tree.map(m_spec, param_specs, is_leaf=shd.is_spec)
+    return out
+
+
+# ------------------------------------------------------------- batch specs
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, rules: dict) -> dict:
+    bd = shd.resolve_spec(("batch",), rules, mesh)[0]
+
+    def spec(k: str):
+        if k in ("patch_embeds", "frame_embeds"):
+            return NamedSharding(mesh, P(bd, None, None))
+        return NamedSharding(mesh, P(bd, None))
+
+    return spec
+
+
+# -------------------------------------------------------- decode state specs
+def state_sharding_for_leaf(cfg: ModelConfig, shape: tuple, mesh: Mesh, rules: dict,
+                            batch: int):
+    """Pattern-match decode-state leaves to shardings.
+
+    KV caches (..., B, S, H, hd): batch → DP axes, heads → 'model'.
+    SSM states (..., B, H, P, N): heads → 'model'.
+    Conv states (..., B, k-1, C=d_inner): channels → 'model'.
+    """
+    bd = shd.resolve_spec(("batch",), rules, mesh)[0]
+    tp = shd.resolve_spec(("heads",), rules, mesh)[0]
+    axes: list = [None] * len(shape)
+    # batch dim: first dim whose size == batch
+    b_i = next((i for i, s in enumerate(shape) if s == batch), None)
+    if b_i is not None:
+        axes[b_i] = bd
+        if len(shape) >= b_i + 4 and shape[b_i + 3] == cfg.hd and \
+                shape[b_i + 2] == cfg.kv_heads_padded:
+            axes[b_i + 2] = tp                      # kv cache heads
+        elif cfg.ssm_state and len(shape) == b_i + 4 and \
+                shape[b_i + 1] == cfg.ssm_heads and shape[b_i + 3] == cfg.ssm_state:
+            axes[b_i + 1] = tp                      # ssm state heads
+        elif cfg.ssm_state and len(shape) == b_i + 3 and shape[b_i + 2] == cfg.d_inner:
+            axes[b_i + 2] = tp                      # conv_x channels
+    # divisibility fallback (batch 1 in long_500k, odd head counts, …)
+    for i, ax in enumerate(axes):
+        if ax is not None and shape[i] % shd._axis_size(mesh, ax) != 0:
+            axes[i] = None
+    return NamedSharding(mesh, P(*axes))
+
+
+def decode_state_shardings(cfg: ModelConfig, state_sds: Any, mesh: Mesh, rules: dict,
+                           batch: int):
+    return jax.tree.map(
+        lambda s: state_sharding_for_leaf(cfg, s.shape, mesh, rules, batch), state_sds,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+# ----------------------------------------------------------------- builders
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.OptConfig, mesh: Mesh,
+                    rules: dict | None = None) -> StepBundle:
+    rules = rules or shd.TRAIN_RULES
+    param_specs = model.lm_specs(cfg)
+    ostate_specs = opt_state_specs(param_specs, ocfg)
+    p_sh = shd.specs_to_shardings(param_specs, mesh, rules)
+    o_sh = shd.specs_to_shardings(ostate_specs, mesh, rules)
+    bspec = batch_shardings(cfg, mesh, rules)
+    cross_pod = ("pod" in mesh.axis_names and mesh.shape["pod"] > 1
+                 and ocfg.grad_compress)
+
+    def train_step(params, opt_state, batch):
+        with shd.use_rules(rules, mesh):
+            loss_fn = partial(model.train_loss, cfg)
+            if cross_pod:
+                from repro.train.grad_compress import pod_compressed_grads
+                loss, grads, new_ef = pod_compressed_grads(
+                    loss_fn, params, batch, opt_state["ef"], mesh)
+                opt_state = dict(opt_state, ef=new_ef)
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            new_params, new_opt = opt.apply_updates(params, grads, opt_state, ocfg)
+        return new_params, new_opt, loss
+
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(p_sh, o_sh, {"tokens": None, "labels": None}),  # filled by caller
+        out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    ), param_specs, ostate_specs, bspec
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh, rules: dict | None = None):
+    rules = rules or shd.SERVE_RULES
+    param_specs = model.lm_specs(cfg)
+    p_sh = shd.specs_to_shardings(param_specs, mesh, rules)
+    bspec = batch_shardings(cfg, mesh, rules)
+
+    def prefill_fn(params, batch):
+        with shd.use_rules(rules, mesh):
+            return model.prefill(cfg, params, batch)
+
+    return prefill_fn, param_specs, p_sh, bspec
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, rules: dict | None = None):
+    rules = rules or shd.SERVE_RULES
+    param_specs = model.lm_specs(cfg)
+    p_sh = shd.specs_to_shardings(param_specs, mesh, rules)
+    bd = shd.resolve_spec(("batch",), rules, mesh)[0]
+
+    def decode_fn(params, token, pos, caches, embeds=None):
+        with shd.use_rules(rules, mesh):
+            return model.decode_step(cfg, params, token, pos, caches, embeds=embeds)
+
+    tok_sh = NamedSharding(mesh, P(bd))
+    emb_sh = NamedSharding(mesh, P(bd, None))
+    return decode_fn, param_specs, p_sh, tok_sh, emb_sh

@@ -1,0 +1,144 @@
+"""Property-based + unit tests for Phi calibration, assignment, invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assign import assign_patterns, level1_matrix, phi_stats
+from repro.core.opcount import matmul_opcounts, preprocessing_benefit
+from repro.core.patterns import (
+    PhiConfig,
+    calibrate,
+    filter_rows,
+    kmeans_binary,
+    pattern_weight_products,
+)
+
+
+binary_matrix = st.integers(0, 2**31 - 1).map(
+    lambda s: (np.random.default_rng(s).random(
+        (np.random.default_rng(s).integers(4, 120), 32)) <
+        np.random.default_rng(s + 1).uniform(0.05, 0.6)).astype(np.float32)
+)
+
+
+@given(binary_matrix)
+@settings(max_examples=25, deadline=None)
+def test_decomposition_lossless(a):
+    """Invariant: A == Level1(idx) + residual for ANY binary A (paper Sec 3.1)."""
+    pats = calibrate(a, PhiConfig(k=16, q=16, iters=5))
+    idx, res = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    l1 = level1_matrix(idx, jnp.asarray(pats, jnp.float32))
+    recon = np.asarray(l1) + np.asarray(res)
+    np.testing.assert_array_equal(recon, a)
+
+
+@given(binary_matrix)
+@settings(max_examples=25, deadline=None)
+def test_l2_never_worse_than_bit_sparsity(a):
+    """Invariant: nnz(L2) <= nnz(A) — assignment falls back to raw bits."""
+    pats = calibrate(a, PhiConfig(k=16, q=16, iters=5))
+    _, res = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    assert int((np.asarray(res) != 0).sum()) <= int(a.sum())
+
+
+@given(binary_matrix)
+@settings(max_examples=25, deadline=None)
+def test_residual_values_in_pm1(a):
+    pats = calibrate(a, PhiConfig(k=16, q=16, iters=5))
+    _, res = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    assert set(np.unique(np.asarray(res))) <= {-1, 0, 1}
+
+
+def test_filter_rows():
+    x = jnp.asarray([[0, 0, 0, 0], [1, 0, 0, 0], [1, 1, 0, 0], [1, 1, 1, 1]], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(filter_rows(x)), [False, False, True, True])
+
+
+def test_kmeans_recovers_prototypes():
+    """k-means must recover well-separated prototypes exactly."""
+    rng = np.random.default_rng(3)
+    protos = np.zeros((4, 16), np.uint8)
+    protos[0, :8] = 1
+    protos[1, 8:] = 1
+    protos[2, ::2] = 1
+    protos[3, 1::2] = 1
+    data = protos[rng.integers(0, 4, 2000)]
+    centers = kmeans_binary(data, q=8, iters=10, seed=0)
+    got = {c.tobytes() for c in centers}
+    assert all(p.tobytes() in got for p in protos)
+
+
+def test_kmeans_few_unique_rows_padded():
+    data = np.tile(np.array([[1, 1, 0, 0]], np.uint8), (50, 1))
+    centers = kmeans_binary(data, q=4)
+    assert centers.shape == (4, 4)
+    assert centers[0].tolist() == [1, 1, 0, 0]
+
+
+def test_identical_rows_give_empty_residual():
+    """Rows identical to a pattern: 100% L2 sparsity (paper Sec. 3.1)."""
+    pats = np.zeros((1, 4, 16), np.uint8)
+    pats[0, 0, :4] = 1
+    pats[0, 1, 4:8] = 1
+    pats[0, 2, 8:12] = 1  # ensure popcount >= 2 patterns
+    a = np.repeat(pats[0, :3], 5, axis=0).astype(np.float32)
+    idx, res = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    assert (np.asarray(res) == 0).all()
+    assert (np.asarray(idx) < 4).all()
+
+
+def test_all_zero_rows_no_pattern_no_l2():
+    pats = np.zeros((1, 2, 16), np.uint8)
+    pats[0, 0, :3] = 1
+    a = np.zeros((5, 16), np.float32)
+    idx, res = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    assert (np.asarray(idx) == 2).all()  # q == none
+    assert (np.asarray(res) == 0).all()
+
+
+def test_bidirectional_correction_signs():
+    """1→0 mismatch ⇒ +1; 0→1 mismatch ⇒ −1 (paper Fig. 2b)."""
+    pats = np.zeros((1, 1, 16), np.uint8)
+    pats[0, 0, :4] = 1  # pattern 1111 0000...
+    a = np.zeros((1, 16), np.float32)
+    a[0, 1:6] = 1  # row 0111 1100... : matches bits 1-3, misses bit 0, extra 4,5
+    idx, res = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    res = np.asarray(res)[0]
+    assert int(np.asarray(idx)[0, 0]) == 0
+    assert res[0] == -1           # pattern has 1, activation has 0
+    assert res[4] == 1 and res[5] == 1  # activation has 1, pattern has 0
+    assert (res[6:] == 0).all() and (res[1:4] == 0).all()
+
+
+def test_pwp_zero_slot():
+    pats = (np.random.default_rng(0).random((2, 4, 16)) < 0.4).astype(np.uint8)
+    w = np.random.default_rng(1).standard_normal((32, 8)).astype(np.float32)
+    pwp = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w))
+    assert pwp.shape == (2, 5, 8)
+    assert np.abs(np.asarray(pwp[:, 4])).max() == 0.0
+
+
+def test_stats_and_opcounts_consistency():
+    rng = np.random.default_rng(5)
+    a = (rng.random((500, 64)) < 0.15).astype(np.float32)
+    pats = calibrate(a, PhiConfig(k=16, q=32, iters=8))
+    st_ = phi_stats(a, pats)
+    assert 0 < st_.bit_density < 0.3
+    assert st_.l2_density <= st_.bit_density + 1e-9
+    ops_ = matmul_opcounts(st_, n=128)
+    assert ops_.speedup_over_bit == pytest.approx(st_.speedup_over_bit, rel=1e-6)
+    assert ops_.phi_total_strict >= ops_.phi_l2_acs
+    assert preprocessing_benefit(ops_) > 0
+
+
+def test_random_matrix_speedup_matches_paper_band():
+    """Paper Table 4 random rows: Phi on iid random binary gives ~2-3.3x over
+    bit sparsity. This is a quantitative anchor — it depends only on the
+    algorithm, not on datasets we don't have offline."""
+    rng = np.random.default_rng(42)
+    for p, lo, hi in [(0.05, 1.5, 3.0), (0.10, 2.0, 3.6), (0.20, 2.0, 3.6)]:
+        a = (rng.random((4096, 256)) < p).astype(np.float32)
+        pats = calibrate(a, PhiConfig(k=16, q=128, iters=15))
+        st_ = phi_stats(a, pats)
+        assert lo <= st_.speedup_over_bit <= hi, (p, st_.speedup_over_bit)

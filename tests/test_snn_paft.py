@@ -1,0 +1,70 @@
+"""SNN-side system tests: surrogate training works, Phi engine is lossless
+per model family, PAFT reduces L2 density without destroying accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import paft
+from repro.core.assign import phi_stats
+from repro.core.patterns import PhiConfig
+from repro.snn import data, models, train
+from repro.snn.models import SNNConfig
+
+
+@pytest.fixture(scope="module")
+def image_data():
+    return data.synthetic_images(512, 10, size=16, seed=0)
+
+
+@pytest.mark.parametrize("kind", ["mlp", "vgg", "resnet", "spikformer"])
+def test_spiking_model_trains_and_phi_lossless(kind, image_data):
+    x, y = image_data
+    cfg = SNNConfig(kind=kind, widths=(16, 32), dim=64, blocks=1, timesteps=2,
+                    input_size=16, phi=PhiConfig(k=16, q=16, iters=6))
+    params, hist = train.train(cfg, x, y, steps=40, batch=64, log_every=0)
+    assert hist[-1][0] < hist[0][0]  # loss decreased
+    phi, acts = models.calibrate_model(params, cfg, jnp.asarray(x[:48]))
+    assert acts, "no spiking GEMMs captured"
+    l0 = models.apply(params, cfg, jnp.asarray(x[:16]))
+    l1 = models.phi_apply(params, cfg, phi, jnp.asarray(x[:16]))
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-4, atol=1e-4)
+
+
+def test_event_frames_drive_timesteps(image_data):
+    x, y = data.synthetic_event_frames(128, 10, size=16, timesteps=4, seed=1)
+    cfg = SNNConfig(kind="vgg", widths=(16,), timesteps=4, input_size=16,
+                    input_channels=2, phi=PhiConfig(k=16, q=8, iters=4))
+    params, _ = train.train(cfg, x, y, steps=10, batch=32, log_every=0)
+    logits = models.apply(params, cfg, jnp.asarray(x[:8]))
+    assert logits.shape == (8, 10) and np.isfinite(np.asarray(logits)).all()
+
+
+def test_paft_reduces_density_on_trained_model(image_data):
+    x, y = image_data
+    cfg = SNNConfig(kind="mlp", widths=(96, 96), timesteps=4, input_size=16,
+                    phi=PhiConfig(k=16, q=32, iters=8))
+    params, _ = train.train(cfg, x, y, steps=150, batch=64, log_every=0)
+    phi, acts = models.calibrate_model(params, cfg, jnp.asarray(x[:96]))
+    d0 = np.mean([phi_stats(acts[n], phi.patterns[n]).l2_density for n in acts])
+    acc0 = train.evaluate(params, cfg, x[:256], y[:256])
+    p2, _ = paft.paft_finetune(params, cfg, phi, x, y, lam=1.0, lr=5e-4,
+                               steps=60, batch=64)
+    phi2, acts2 = models.calibrate_model(p2, cfg, jnp.asarray(x[:96]))
+    d1 = np.mean([phi_stats(acts2[n], phi2.patterns[n]).l2_density for n in acts2])
+    acc1 = train.evaluate(p2, cfg, x[:256], y[:256])
+    assert d1 < d0, (d0, d1)
+    assert acc1 >= acc0 - 0.05, (acc0, acc1)  # paper: minor accuracy cost
+
+
+def test_int8_pwp_quantization_error_bounded():
+    from repro.core.patterns import calibrate, pattern_weight_products, quantize_pwp
+    rng = np.random.default_rng(3)
+    a = (rng.random((256, 64)) < 0.2).astype(np.float32)
+    w = rng.standard_normal((64, 48)).astype(np.float32)
+    pats = calibrate(a, PhiConfig(k=16, q=16, iters=6))
+    pwp = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w))
+    q8, scale = quantize_pwp(pwp)
+    deq = q8.astype(jnp.float32) * scale[..., None]
+    denom = float(jnp.abs(pwp).max())
+    assert float(jnp.abs(deq - pwp).max()) / denom < 0.01
