@@ -75,6 +75,33 @@ def main() -> list[str]:
     # interpret-mode pallas latencies (correctness path, not perf)
     t_matcher = _time(lambda: ops.matcher(a, pats))
     rows.append(f"kernels,pallas_matcher_interpret,{t_matcher:.1f},interpret")
+
+    # ---- fused single-pass kernel vs the 3-kernel pipeline ----------------
+    # Wall time on TPU is the real score; in interpret mode (CPU) both paths
+    # run the Pallas interpreter so the decisive comparison is the modelled
+    # HBM traffic (perfmodel.phi_kernel_traffic): fusion eliminates the
+    # (M, T) index and (M, K) residual round-trips entirely.
+    on_tpu = jax.default_backend() == "tpu"
+    bench_m = M if on_tpu else 512          # interpreter is slow; shrink off-TPU
+    ab = a[:bench_m]
+    reps = 5 if on_tpu else 1
+
+    t_3k = _time(lambda: ops.phi_matmul(ab, w, pats, pwp, impl="pallas"), reps=reps)
+    t_fused = _time(lambda: ops.phi_matmul(ab, w, pats, pwp, impl="fused"), reps=reps)
+    mode = "tpu" if on_tpu else "interpret"
+    rows.append(f"kernels,pallas_3kernel_{mode},{t_3k:.1f},{t_3k / t_fused:.2f}x_of_fused")
+    rows.append(f"kernels,pallas_fused_{mode},{t_fused:.1f},1.00x")
+
+    from repro.core.perfmodel import GemmShape, phi_kernel_traffic
+    for tag, pwp_b in (("f32pwp", 4), ("int8pwp", 1)):
+        tr = phi_kernel_traffic(GemmShape(M, K, N), k=16, q=128,
+                                pwp_bytes_per_el=pwp_b)
+        b3, bf = tr["three_kernel"], tr["fused"]
+        rows.append(f"kernels,hbm_bytes_3kernel_{tag},{b3.total:.0f},"
+                    f"idx+residual+coo_roundtrips="
+                    f"{b3.idx_bytes + b3.residual_bytes + b3.coo_bytes:.0f}B")
+        rows.append(f"kernels,hbm_bytes_fused_{tag},{bf.total:.0f},"
+                    f"{b3.total / bf.total:.2f}x_less_traffic_than_3kernel")
     return rows
 
 

@@ -1,0 +1,39 @@
+"""Version-compatibility shims shared across the codebase.
+
+Currently only ``shard_map``: jax moved it from
+``jax.experimental.shard_map`` to the top-level ``jax`` namespace around
+0.5.x and renamed the replication-check kwarg ``check_rep`` → ``check_vma``;
+pinning either spelling breaks the other side. Every module that shard_maps
+imports it from here and uses the new-style ``check_vma`` kwarg, which this
+wrapper translates for old jax.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:  # jax >= 0.5: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: experimental namespace, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore[no-redef]
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+@functools.wraps(_shard_map)
+def shard_map(*args, **kwargs):
+    if not _HAS_CHECK_VMA:
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if "axis_names" in kwargs:
+            # New jax names the *manual* axes; old jax takes the complement
+            # (the set of axes left automatic) as ``auto``.
+            manual = frozenset(kwargs.pop("axis_names"))
+            mesh = kwargs.get("mesh", args[1] if len(args) > 1 else None)
+            auto = frozenset(getattr(mesh, "axis_names", ())) - manual
+            if auto:
+                kwargs["auto"] = auto
+    return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

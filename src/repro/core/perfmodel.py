@@ -152,6 +152,77 @@ def compare(shapes: list[GemmShape], stats: list[PhiStats]) -> dict:
     return out
 
 
+# ------------------------------------------------- TPU kernel HBM traffic ---
+# First-order HBM byte model of the two Pallas lowerings of phi_matmul,
+# following the BlockSpec revisit rule (a block is re-fetched iff its index
+# map changes between consecutive grid steps; held in VMEM otherwise).
+# This is the model the fused-kernel acceptance test asserts on: off-TPU the
+# kernels run in interpret mode, so wall-clock is meaningless and the
+# eliminated bytes are the measurable claim.
+
+@dataclasses.dataclass(frozen=True)
+class KernelTraffic:
+    """Per-stream HBM bytes of one phi_matmul lowering."""
+
+    a_bytes: float          # binary activation blocks
+    patterns_bytes: float   # pattern tensor streams
+    pwp_bytes: float        # PWP stripe streams
+    w_bytes: float          # weight stripe streams (L2 side)
+    idx_bytes: float        # (M, T) index write + re-reads   (3-kernel only)
+    residual_bytes: float   # (M, K) residual write + read    (3-kernel only)
+    coo_bytes: float        # packed/bucketed COO round-trips (3-kernel only)
+    out_bytes: float        # partial + final output traffic
+
+    @property
+    def total(self) -> float:
+        return (self.a_bytes + self.patterns_bytes + self.pwp_bytes
+                + self.w_bytes + self.idx_bytes + self.residual_bytes
+                + self.coo_bytes + self.out_bytes)
+
+
+def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
+                       block_m: int = 256, block_n: int = 256,
+                       nnz_budget: float = 0.08, pwp_bytes_per_el: int = 4,
+                       w_bytes_per_el: int = 4) -> dict[str, KernelTraffic]:
+    """HBM bytes of the 3-kernel pipeline vs the fused single-pass kernel.
+
+    Returns {"three_kernel": ..., "fused": ...}. The fused savings are the
+    index and residual round-trips, the per-M-stripe pattern re-fetches, and
+    the collapse of two partial (M, N) f32 outputs into one write.
+    """
+    M, K, N = shape.m, shape.k, shape.n
+    T = K // k
+    gm, gn = -(-M // block_m), -(-N // block_n)
+    f32 = 4
+    pwp_stream = gm * T * (q + 1) * N * pwp_bytes_per_el  # per-M-stripe PWP
+    w_stream = gm * K * N * w_bytes_per_el                # per-M-stripe W
+    cap = max(128, int(nnz_budget * M * K))
+    per_block = max(8, min(cap, int(4 * nnz_budget * block_m * K)))
+
+    three = KernelTraffic(
+        a_bytes=M * K * f32,                       # matcher reads a once
+        patterns_bytes=gm * T * q * k * f32,       # matcher re-streams per i
+        pwp_bytes=pwp_stream,                      # l1_gather
+        w_bytes=w_stream,                          # l2_spmm
+        idx_bytes=M * T * 4 * (1 + gn),            # write + per-n-block reads
+        residual_bytes=M * K * (1 + 1),            # int8 write + pack read
+        coo_bytes=cap * (4 + 4 + 1) * 2            # global COO write + read
+                  + gm * per_block * (4 + 4 + 4) * 2,  # bucketed write + read
+        out_bytes=M * N * f32 * 5,                 # out1+out2 w, both r, sum w
+    )
+    fused = KernelTraffic(
+        a_bytes=M * K * f32,                       # a block held over n sweep
+        patterns_bytes=T * q * k * f32,            # constant index map: once
+        pwp_bytes=pwp_stream,
+        w_bytes=w_stream,
+        idx_bytes=0.0,                             # lives in registers
+        residual_bytes=0.0,                        # lives in registers
+        coo_bytes=0.0,                             # no packing stage
+        out_bytes=M * N * f32 + gm * 4,            # single write + nnz audit
+    )
+    return {"three_kernel": three, "fused": fused}
+
+
 def vgg16_gemm_shapes(img: int = 32, classes: int = 100) -> list[GemmShape]:
     """VGG-16 (CIFAR variant: 13 convs + 1 FC) as im2col GEMMs."""
     cfg = [(64, 3), (64, 64), (128, 64), (128, 128), (256, 128), (256, 256),

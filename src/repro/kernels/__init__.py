@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Phi's hot spot IS a custom pipeline (paper Sec. 4); lowerings here:
+#   matcher.py / phi_gather.py / phi_spmm.py — the 3-kernel pipeline
+#   phi_fused.py — single-pass fused kernel (match + L1 + L2 in VMEM)
+#   lif.py — LIF neuron update
+#   ops.py — padded/jit'd public wrappers + impl dispatch (phi_matmul)
+#   ref.py — pure-jnp oracles
+from repro.kernels.phi_fused import phi_fused_pallas  # noqa: F401
+
+__all__ = ["phi_fused_pallas"]

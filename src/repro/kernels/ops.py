@@ -21,6 +21,7 @@ from repro.core.patterns import PhiConfig, pattern_weight_products  # noqa: F401
 from repro.kernels import ref
 from repro.kernels.lif import lif_pallas
 from repro.kernels.matcher import matcher_pallas
+from repro.kernels.phi_fused import phi_fused_pallas
 from repro.kernels.phi_gather import l1_gather_pallas
 from repro.kernels.phi_spmm import l2_spmm_pallas
 from repro.utils import cdiv
@@ -36,6 +37,20 @@ def _pad_rows(x: jax.Array, mult: int, fill=0) -> jax.Array:
     if pad == 0:
         return x
     return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1), constant_values=fill)
+
+
+def _pick_block_n(N: int, block_n: int) -> int:
+    """Largest block size ≤ block_n that divides N (kernels require exact
+    N tiling; e.g. N=384 with block_n=256 -> 192). Degenerate divisors are
+    rejected loudly: a 1- or 2-wide lane tile is not a usable TPU layout."""
+    b = min(block_n, N)
+    while N % b:
+        b -= 1
+    if b < 8 and b != N:
+        raise ValueError(
+            f"no usable block_n ≤ {block_n} divides N={N} (best divisor {b}); "
+            "pad N to a multiple of 128 before calling")
+    return b
 
 
 # ---------------------------------------------------------------- matcher ---
@@ -62,10 +77,9 @@ def l1_gather(idx: jax.Array, pwp: jax.Array, *, block_m: int = 256, block_n: in
     idx2 = idx.reshape(-1, T)
     M = idx2.shape[0]
     bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
-    bn = min(block_n, N)
+    bn = _pick_block_n(N, block_n)
     # Padding rows index the all-zero slot q.
     idx2 = _pad_rows(idx2, bm, fill=pwp.shape[1] - 1)
-    assert N % bn == 0, (N, bn)
     out = l1_gather_pallas(idx2, pwp, block_m=bm, block_n=bn, mode=mode,
                            interpret=_interpret())
     return out[:M].reshape(*lead, N)
@@ -92,14 +106,60 @@ def bucket_coo(rows: jax.Array, cols: jax.Array, signs: jax.Array, m: int,
     return r.astype(jnp.int32), c.astype(jnp.int32), s, dropped
 
 
+def phi_l2_audit(a: jax.Array, patterns: jax.Array, *, nnz_budget: float = 0.08,
+                 block_m: int = 256, chunk_rows: int | None = None,
+                 entry_block: int = 8192) -> dict:
+    """Capacity-budget audit of a Phi decomposition (no matmul performed).
+
+    Returns the dropped-entry counters of every budgeted path for activations
+    ``a`` (..., K): ``pack_overflow`` (entries beyond the global COO cap of
+    the pallas path), ``bucket_dropped`` (entries beyond the per-M-block cap
+    of ``bucket_coo``), and ``chunk_overflow`` (entries beyond the per-chunk
+    cap of the "coo" path). All zero ⇔ the budgeted impls are exact for this
+    input; a numerics mismatch with nonzero counters is a capacity problem,
+    not a kernel bug. The "fused" and "ref" impls are budget-free.
+    """
+    from repro.core.assign import assign_patterns, pack_l2_coo_jit
+
+    a2 = a.reshape(-1, a.shape[-1])
+    M, K = a2.shape
+    _, residual = assign_patterns(a2, patterns)
+    cap = max(128, int(nnz_budget * M * K))
+    rows, cols, signs, pack_over = pack_l2_coo_jit(residual, cap)
+    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    per_block = max(8, min(cap, int(4 * nnz_budget * bm * K)))
+    G = cdiv(M, bm)
+    _, _, _, bucket_drop = bucket_coo(rows, cols, signs, G * bm, bm, per_block)
+    # Mirror _phi_matmul_coo_chunked's capacity exactly (env-tunable chunk
+    # size, cap rounded up to a whole number of entry blocks) so the audit
+    # can never report overflow the real path doesn't have.
+    import os as _os
+    if chunk_rows is None:
+        chunk_rows = int(_os.environ.get("PHI_CHUNK_ROWS", "2048"))
+    nc = cdiv(M, chunk_rows)
+    chunk_cap = max(128, int(nnz_budget * chunk_rows * K))
+    chunk_cap = ((chunk_cap + entry_block - 1) // entry_block) * entry_block
+    pad = nc * chunk_rows - M
+    res3 = jnp.pad(residual, ((0, pad), (0, 0))).reshape(nc, chunk_rows, K)
+    chunk_nnz = jnp.abs(res3).sum(axis=(1, 2))
+    chunk_over = (chunk_nnz - chunk_cap).clip(min=0).sum()
+    return {
+        "l2_nnz": int(jnp.abs(residual).sum()),
+        "cap": cap,
+        "pack_overflow": int(pack_over),
+        "bucket_dropped": int(bucket_drop),
+        "chunk_cap": chunk_cap,
+        "chunk_overflow": int(chunk_over),
+    }
+
+
 def l2_spmm(rows: jax.Array, cols: jax.Array, signs: jax.Array, w: jax.Array,
             m: int, *, block_m: int = 256, block_n: int = 256, cap: int | None = None,
             mode: str = "take"):
     """Padded COO (sentinel row == m) × w (K, N) -> (m, N) f32."""
     K, N = w.shape
     bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
-    bn = min(block_n, N)
-    assert N % bn == 0
+    bn = _pick_block_n(N, block_n)
     G = cdiv(m, bm)
     if cap is None:
         cap = int(rows.shape[0])
@@ -130,6 +190,109 @@ def lif_step(v: jax.Array, x: jax.Array, *, decay: float = 0.5, threshold: float
     s = s.reshape(-1)[:n].reshape(shape)
     vn = vn.reshape(-1)[:n].reshape(shape)
     return s, vn
+
+
+# ------------------------------------------------------------ fused kernel ---
+# Block-size autotuner for the fused kernel, keyed on (M, K, N, q). On TPU
+# (or with PHI_AUTOTUNE=1) candidate configs are timed once and cached; in
+# interpret mode (CPU correctness runs) timing Pallas is meaningless, so a
+# VMEM-footprint heuristic picks the config the measurement path would
+# almost always choose anyway: the largest blocks that keep the per-program
+# working set under the VMEM budget.
+_FUSED_TUNE_CACHE: dict[tuple, tuple[int, int]] = {}
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a 16 MiB core, headroom for Mosaic
+
+
+def _fused_vmem_bytes(bm: int, bn: int, K: int, T: int, q: int) -> int:
+    """Per-program f32 working set of the fused kernel (see phi_fused.py)."""
+    return 4 * (bm * K              # activation block
+                + T * q * (K // T)  # patterns
+                + T * (q + 1) * bn  # PWP stripe
+                + K * bn            # weight stripe
+                + 2 * bm * bn)      # out block + accumulator
+
+
+def _fused_candidates(M: int, N: int) -> list[tuple[int, int]]:
+    bms = [bm for bm in (128, 256) if bm <= max(8, 1 << (M - 1).bit_length())]
+    bns = [bn for bn in (128, 256, 512) if N % bn == 0] or [N]
+    return [(bm, bn) for bm in bms or [128] for bn in bns]
+
+
+def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
+                          measure: bool | None = None) -> tuple[int, int]:
+    """Pick (block_m, block_n) for the fused kernel; cached per shape key."""
+    import os
+    key = (M, K, N, q, T)
+    if key in _FUSED_TUNE_CACHE:
+        return _FUSED_TUNE_CACHE[key]
+    cands = [c for c in _fused_candidates(M, N)
+             if _fused_vmem_bytes(c[0], c[1], K, T, q) <= _VMEM_BUDGET_BYTES]
+    cands = cands or [min(_fused_candidates(M, N),
+                          key=lambda c: _fused_vmem_bytes(c[0], c[1], K, T, q))]
+    if measure is None:
+        measure = (not _interpret()) or os.environ.get("PHI_AUTOTUNE") == "1"
+    if not measure or len(cands) == 1:
+        best = max(cands, key=lambda c: (c[0] * c[1], c[1]))
+    else:
+        import time
+        import numpy as _np
+        rng = _np.random.default_rng(0)
+        k = K // T
+        a = jnp.asarray((rng.random((max(c[0] for c in cands), K)) < 0.1),
+                        jnp.float32)
+        pats = jnp.asarray((rng.random((T, q, k)) < 0.5), jnp.float32)
+        pwp = jnp.asarray(rng.standard_normal((T, q + 1, N)), jnp.float32)
+        scale = jnp.ones((T, q + 1), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        timed = []
+        for bm, bn in cands:
+            fn = lambda: phi_fused_pallas(a[:bm], pats, pwp, scale, w,
+                                          block_m=bm, block_n=bn,
+                                          interpret=_interpret())
+            jax.block_until_ready(fn())           # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            timed.append((time.perf_counter() - t0, (bm, bn)))
+        best = min(timed)[1]
+    _FUSED_TUNE_CACHE[key] = best
+    return best
+
+
+def phi_fused(a: jax.Array, patterns: jax.Array, pwp: jax.Array, w: jax.Array,
+              *, pwp_scale: jax.Array | None = None,
+              block_m: int | None = None, block_n: int | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Single-pass fused Phi matmul (matcher + L1 + L2 in one kernel).
+
+    a (..., K) binary × w (K, N) -> ((..., N) f32, l2_nnz (num_m_blocks,)
+    int32). ``l2_nnz`` counts residual entries per M-block — what a budgeted
+    unfused pipeline would have had to fit in its per-block ``cap``. The
+    fused kernel itself is exact for any budget (the residual is contracted
+    densely in VMEM), so nothing is ever dropped.
+
+    pwp may be f32/bf16 (pwp_scale None) or int8 with per-row scales from
+    ``quantize_pwp`` — the dequant happens in-kernel on the selected rows.
+    """
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    T, q, k = patterns.shape
+    N = w.shape[-1]
+    a2 = a.reshape(-1, K)
+    M = a2.shape[0]
+    if block_m is None or block_n is None:
+        tbm, tbn = autotune_fused_blocks(M, K, N, q, T)
+        block_m, block_n = block_m or tbm, block_n or tbn
+    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    a2 = _pad_rows(a2, bm)
+    bn = _pick_block_n(N, block_n)
+    if pwp_scale is None:
+        if pwp.dtype == jnp.int8:
+            raise ValueError("int8 pwp requires pwp_scale (from quantize_pwp); "
+                             "without it the L1 rows would be silently unscaled")
+        pwp_scale = jnp.ones((T, q + 1), jnp.float32)
+    out, nnz = phi_fused_pallas(a2, patterns, pwp, pwp_scale, w,
+                                block_m=bm, block_n=bn, interpret=_interpret())
+    return out[:M, :N].reshape(*lead, N), nnz
 
 
 # -------------------------------------------------------- pjit-scale path ---
@@ -209,19 +372,22 @@ def phi_matmul(
     *,
     impl: str = "pallas",
     nnz_budget: float = 0.08,
-    block_m: int = 256,
-    block_n: int = 256,
+    block_m: int | None = None,   # None: autotune (fused) / 256 (pallas)
+    block_n: int | None = None,
     gather_dtype=None,
     pwp_scale=None,
 ) -> jax.Array:
     """Full Phi sparse matmul: a (..., K) binary × w (K, N) -> (..., N) f32.
 
     impl:
+      "fused"  — single-pass Pallas kernel (match + L1 + L2 fused in VMEM;
+                 index/residual never touch HBM; exact for any budget);
       "pallas" — matcher/gather/spmm kernels (interpret mode off-TPU);
       "coo"    — pure-XLA gather/scatter path (pjit-safe; used by dry-run);
       "ref"    — dense L2 oracle (exactness baseline).
     ``nnz_budget`` is the static L2 capacity as a fraction of M·K (paper
-    measures ≈3% density; default leaves 2.6× headroom).
+    measures ≈3% density; default leaves 2.6× headroom). It does not apply
+    to "fused"/"ref", which are budget-free.
     """
     lead = a.shape[:-1]
     K = a.shape[-1]
@@ -231,6 +397,11 @@ def phi_matmul(
     if impl == "ref":
         return ref.phi_matmul_ref(a2, w, patterns, pwp).reshape(*lead, N)
 
+    if impl == "fused":
+        out, _ = phi_fused(a2, patterns, pwp, w, pwp_scale=pwp_scale,
+                           block_m=block_m, block_n=block_n)
+        return out.reshape(*lead, N)
+
     from repro.core.assign import assign_patterns, pack_l2_coo_jit
 
     if impl == "coo":
@@ -239,6 +410,8 @@ def phi_matmul(
                                        pwp_scale=pwp_scale).reshape(*lead, N)
 
     assert impl == "pallas", impl
+    block_m = block_m or 256
+    block_n = block_n or 256
     idx, residual = matcher(a2, patterns, block_m=block_m)
     out1 = l1_gather(idx, pwp, block_m=block_m, block_n=block_n)
     cap = max(128, int(nnz_budget * M * K))

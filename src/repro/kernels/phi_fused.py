@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused single-pass Phi matmul (paper Sec. 4.2–4.3).
+
+The ASIC processes the two-level hierarchy *on the fly*: the matcher feeds
+pattern indices straight into the L1 PWP retrieval and the ±1 residual
+straight into the L2 adder trees — neither ever touches DRAM. The seed's
+``impl="pallas"`` path instead launches three kernels
+(``matcher_pallas`` → ``l1_gather_pallas`` → ``l2_spmm_pallas``) and
+round-trips the (M, T) index and (M, K) residual tensors through HBM between
+them — exactly the traffic Prosperity/SpikeX-class dataflows keep on-chip.
+
+This kernel fuses the whole pipeline into one ``(M/bm, N/bn)`` grid:
+
+  per program, for each of the T K-partitions (statically unrolled):
+    1. match:   Hamming-as-matmul ``H = |a|₁ + |p|₁ − 2·a·pᵀ`` on the MXU,
+                argmin + the strictly-better-than-bit-sparsity rule on the
+                VPU — identical math to ``matcher_pallas`` but the (bm,)
+                index vector lives only in registers;
+    2. L1:      one-hot(idx) @ PWP[t] — the systolic gather of
+                ``l1_gather_pallas`` — accumulated into the VMEM out block;
+                int8 PWPs are dequantised per selected row via the same
+                one-hot contraction against the (q+1,) scale vector;
+    3. L2:      ``residual_t @ W[tk:(t+1)k]`` — the residual (bm, k) block
+                of {−1, 0, +1} *is* the signed one-hot matrix of its own
+                COO entries, so the scatter-as-contraction trick of
+                ``l2_spmm_pallas`` degenerates to a single dense MXU call on
+                the in-register residual. No packing, no per-block capacity,
+                no dropped entries: fusion makes the L2 budget unconstrained.
+
+The kernel additionally emits the per-M-block L2 nnz count so callers can
+audit what a budgeted (capacity-``cap``) unfused pipeline *would have
+dropped* — the accounting that `ops.bucket_coo` reports for the 3-kernel
+path.
+
+HBM traffic vs the 3-kernel pipeline (modelled in
+``repro.core.perfmodel.phi_kernel_traffic``): the (M, T)·4B index and
+(M, K)·1B residual write+read disappear, the activation block is fetched
+once per M-stripe instead of once per kernel, and the two partial (M, N)
+f32 outputs (write + read + final add) collapse into a single output write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref, out_ref, nnz_ref,
+                  *, q: int):
+    T, _, k = p_ref.shape
+    q1 = q + 1
+    a = a_ref[...].astype(jnp.float32)                     # (bm, K) binary
+    acc = jnp.zeros(out_ref.shape, jnp.float32)            # (bm, bn)
+    nnz = jnp.zeros((), jnp.float32)
+    for t in range(T):                                     # static unroll
+        at = a[:, t * k:(t + 1) * k]                       # (bm, k)
+        p = p_ref[t].astype(jnp.float32)                   # (q, k)
+        # -- match (MXU): H = |a| + |p| − 2 a·pᵀ ---------------------------
+        dot = jnp.dot(at, p.T, preferred_element_type=jnp.float32)  # (bm, q)
+        pop_a = at.sum(-1)                                 # (bm,)
+        ham = pop_a[:, None] + p.sum(-1)[None, :] - 2.0 * dot
+        best = jnp.argmin(ham, axis=-1)                    # (bm,)
+        use = jnp.min(ham, axis=-1) < pop_a                # strict rule
+        idx = jnp.where(use, best, q)                      # q == "none"
+        # -- L1 (MXU): one-hot retrieval straight from registers -----------
+        onehot = (idx[:, None] == jax.lax.iota(jnp.int32, q1)[None, :]).astype(
+            jnp.float32)                                   # (bm, q+1)
+        rows = jnp.dot(onehot, pwp_ref[t].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)  # (bm, bn)
+        row_scale = jnp.dot(onehot, scale_ref[t][:, None],
+                            preferred_element_type=jnp.float32)  # (bm, 1)
+        acc += rows * row_scale
+        # -- L2 (MXU): in-register residual, contraction against W tile ----
+        chosen = jnp.dot(onehot[:, :q], p, preferred_element_type=jnp.float32)
+        residual = at - chosen                             # (bm, k) {−1,0,+1}
+        acc += jnp.dot(residual, w_ref[t * k:(t + 1) * k, :].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        nnz += jnp.abs(residual).sum()
+    out_ref[...] = acc
+    nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def phi_fused_pallas(
+    a: jax.Array,
+    patterns: jax.Array,
+    pwp: jax.Array,
+    pwp_scale: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-pass Phi matmul.
+
+    a:         (M, K) binary float; M must be a multiple of block_m (ops pads)
+    patterns:  (T, q, k) with K = T·k
+    pwp:       (T, q+1, N) f32/bf16/int8, pwp[:, q] == 0; N multiple of block_n
+    pwp_scale: (T, q+1) f32 per-row dequant scales (all-ones when unquantised)
+    w:         (K, N) f32/bf16
+
+    Returns (out (M, N) f32, l2_nnz (M // block_m,) int32 — residual entries
+    per M-block, the budget-audit counter).
+    """
+    M, K = a.shape
+    T, q, k = patterns.shape
+    N = w.shape[-1]
+    assert K == T * k and M % block_m == 0 and N % block_n == 0, (
+        a.shape, patterns.shape, w.shape, block_m, block_n)
+    assert pwp.shape == (T, q + 1, N) and pwp_scale.shape == (T, q + 1)
+    grid = (M // block_m, N // block_n)
+    kernel = functools.partial(_fused_kernel, q=q)
+    out, nnz = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((T, q, k), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((T, q + 1, block_n), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((T, q + 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M // block_m, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), patterns.astype(jnp.float32), pwp,
+      pwp_scale.astype(jnp.float32), w)
+    return out, nnz[:, 0]

@@ -122,7 +122,7 @@ def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=N
     of its K-tiles (its PWP slice + its COO columns) and a psum('model')
     completes the reduction — the Phi analogue of Megatron row-parallelism.
     """
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import current_mesh, resolve_spec
 
@@ -249,7 +249,11 @@ def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict
         return x @ w.astype(x.dtype)
 
     # capture pass (dense math, spike stats only)
-    _forward(cfg.with_(spiking=False), params, sample_batch, matmul=capture_mm)
+    out, _ = _forward(cfg.with_(spiking=False), params, sample_batch, matmul=capture_mm)
+    # ordered io_callbacks run asynchronously: flush them before reading
+    # ``captured``, or the walk below races an empty dict.
+    jax.block_until_ready(out)
+    jax.effects_barrier()
 
     walk_counter: dict[str, int] = {}
 

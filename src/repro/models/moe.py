@@ -24,7 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.distributed.sharding import ParamSpec, current_mesh, shard
 from repro.models.config import ModelConfig

@@ -174,7 +174,12 @@ def apply(
             hb = h.reshape((-1,) + h.shape[2:])
             hb = jax.lax.reduce_window(hb, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
             h = hb.reshape(Tb + hb.shape[1:])
-        h = h.mean(axis=(2, 3))  # global average pool -> (T, B, feat)
+        # Global *sum* pooling (spike-count readout): mean pooling divides the
+        # head current by H·W, which leaves the classifier LIF permanently
+        # sub-threshold at init (zero spikes -> zero logits -> flat ln(C)
+        # loss with no head gradient). Summing preserves the spike counts the
+        # head integrates, the standard SNN classifier readout.
+        h = h.sum(axis=(2, 3))  # (T, B, feat)
         h = spiking_linear(h, params["head"]["w"], "head")
         return h.mean(0)
 

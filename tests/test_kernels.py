@@ -85,7 +85,7 @@ def test_lif_kernel(reset, shape):
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=1e-6)
 
 
-@pytest.mark.parametrize("impl", ["ref", "coo", "pallas"])
+@pytest.mark.parametrize("impl", ["ref", "coo", "pallas", "fused"])
 @pytest.mark.parametrize("shape", [(128, 64, 96), (200, 32, 128), (64, 128, 256)])
 def test_phi_matmul_exact(impl, shape):
     """Phi without PAFT is lossless (paper Sec. 5.4.2): decomposition == dense."""

@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional dev dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.assign import assign_patterns, level1_matrix, phi_stats

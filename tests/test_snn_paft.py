@@ -8,6 +8,7 @@ import pytest
 from repro.core import paft
 from repro.core.assign import phi_stats
 from repro.core.patterns import PhiConfig
+from repro.kernels import ops
 from repro.snn import data, models, train
 from repro.snn.models import SNNConfig
 
@@ -17,6 +18,7 @@ def image_data():
     return data.synthetic_images(512, 10, size=16, seed=0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kind", ["mlp", "vgg", "resnet", "spikformer"])
 def test_spiking_model_trains_and_phi_lossless(kind, image_data):
     x, y = image_data
@@ -26,6 +28,16 @@ def test_spiking_model_trains_and_phi_lossless(kind, image_data):
     assert hist[-1][0] < hist[0][0]  # loss decreased
     phi, acts = models.calibrate_model(params, cfg, jnp.asarray(x[:48]))
     assert acts, "no spiking GEMMs captured"
+    # Budget audit BEFORE the numerics check: an L2 capacity overflow in the
+    # budgeted impls silently drops corrections and would surface below as a
+    # bogus "numerics" mismatch. Zero dropped-entry counters ⇒ any remaining
+    # difference is a real kernel bug.
+    for name in phi.patterns:
+        audit = ops.phi_l2_audit(jnp.asarray(acts[name]),
+                                 jnp.asarray(phi.patterns[name]))
+        assert audit["pack_overflow"] == 0, (name, audit)
+        assert audit["bucket_dropped"] == 0, (name, audit)
+        assert audit["chunk_overflow"] == 0, (name, audit)
     l0 = models.apply(params, cfg, jnp.asarray(x[:16]))
     l1 = models.phi_apply(params, cfg, phi, jnp.asarray(x[:16]))
     np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-4, atol=1e-4)
@@ -40,6 +52,7 @@ def test_event_frames_drive_timesteps(image_data):
     assert logits.shape == (8, 10) and np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow
 def test_paft_reduces_density_on_trained_model(image_data):
     x, y = image_data
     cfg = SNNConfig(kind="mlp", widths=(96, 96), timesteps=4, input_size=16,
