@@ -5,9 +5,18 @@ Wall-time on CPU is NOT the TPU score (that's §Roofline) — this validates the
 COO Phi path beats the dense matmul because the work is proportional to
 nnz(L2), not M·K·N. Also times the Pallas kernels in interpret mode for
 correctness-path latency bookkeeping.
+
+Per-impl rows are forced through the ``kernels.dispatch`` execution policy
+(per-call overrides — the benchmark is the A/B harness), plus one
+``policy_pick`` row recording what the policy itself resolves for the bench
+shape on this backend. ``--json PATH`` additionally writes a structured
+``BENCH_kernels.json`` (per-impl latency + modelled HBM bytes + dispatch
+decisions) which CI uploads as an artifact, so the perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -16,7 +25,7 @@ import numpy as np
 
 from repro.core.assign import assign_patterns, pack_l2_coo_jit
 from repro.core.patterns import PhiConfig, calibrate, pattern_weight_products
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 
 
 def _time(fn, *args, reps: int = 5) -> float:
@@ -28,8 +37,13 @@ def _time(fn, *args, reps: int = 5) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main() -> list[str]:
-    rows = ["kernels,name,us_per_call,derived"]
+def main(json_path: str | None = None) -> list[str]:
+    records: list[dict] = []
+
+    def rec(name: str, us: float, derived: str, **extra) -> None:
+        records.append({"name": name, "us_per_call": round(us, 1),
+                        "derived": derived, **extra})
+
     rng = np.random.default_rng(0)
     M, K, N = 2048, 256, 512
     protos = (rng.random((24, K)) < 0.11).astype(np.float32)
@@ -41,7 +55,7 @@ def main() -> list[str]:
 
     dense = jax.jit(lambda a, w: a @ w)
     t_dense = _time(dense, a, w)
-    rows.append(f"kernels,dense_matmul,{t_dense:.1f},1.00x")
+    rec("dense_matmul", t_dense, "1.00x")
 
     idx, res = assign_patterns(a, pats)
     coo = pack_l2_coo_jit(res, int(0.08 * M * K))
@@ -54,27 +68,29 @@ def main() -> list[str]:
         return out1 + out2
 
     t_phi = _time(phi_post_match, idx, rowsv, cols, signs, w, pwp)
-    rows.append(f"kernels,phi_coo_post_match,{t_phi:.1f},{t_dense / t_phi:.2f}x_vs_dense"
-                "_cpu (CPU XLA gather/scatter is scalar — see roofline for the"
-                " TPU target; theoretical op ratio below)")
+    rec("phi_coo_post_match", t_phi, f"{t_dense / t_phi:.2f}x_vs_dense"
+        "_cpu (CPU XLA gather/scatter is scalar — see roofline for the"
+        " TPU target; theoretical op ratio below)")
 
     from repro.core.assign import phi_stats
     from repro.core.opcount import matmul_opcounts
     st = phi_stats(np.asarray(a), np.asarray(pats))
     oc = matmul_opcounts(st, n=N)
-    rows.append(f"kernels,phi_theoretical_acs,{0:.1f},{oc.speedup_over_bit:.2f}"
-                f"x_fewer_ACs_than_bit_sparse_{oc.speedup_over_dense:.1f}x_vs_dense")
+    rec("phi_theoretical_acs", 0.0, f"{oc.speedup_over_bit:.2f}"
+        f"x_fewer_ACs_than_bit_sparse_{oc.speedup_over_dense:.1f}x_vs_dense")
 
     @jax.jit
     def phi_full(a, w, pats, pwp):
-        return ops.phi_matmul(a, w, pats, pwp, impl="coo")
+        return dispatch.phi_matmul(a, w, pats, pwp, site="bench.coo",
+                                   override="coo")
 
     t_full = _time(phi_full, a, w, pats, pwp)
-    rows.append(f"kernels,phi_coo_incl_match,{t_full:.1f},{t_dense / t_full:.2f}x_vs_dense_cpu")
+    rec("phi_coo_incl_match", t_full, f"{t_dense / t_full:.2f}x_vs_dense_cpu",
+        impl="coo")
 
     # interpret-mode pallas latencies (correctness path, not perf)
     t_matcher = _time(lambda: ops.matcher(a, pats))
-    rows.append(f"kernels,pallas_matcher_interpret,{t_matcher:.1f},interpret")
+    rec("pallas_matcher_interpret", t_matcher, "interpret")
 
     # ---- fused single-pass kernel vs the 3-kernel pipeline ----------------
     # Wall time on TPU is the real score; in interpret mode (CPU) both paths
@@ -86,24 +102,67 @@ def main() -> list[str]:
     ab = a[:bench_m]
     reps = 5 if on_tpu else 1
 
-    t_3k = _time(lambda: ops.phi_matmul(ab, w, pats, pwp, impl="pallas"), reps=reps)
-    t_fused = _time(lambda: ops.phi_matmul(ab, w, pats, pwp, impl="fused"), reps=reps)
+    t_3k = _time(lambda: dispatch.phi_matmul(ab, w, pats, pwp,
+                                             site="bench.pallas",
+                                             override="pallas"), reps=reps)
+    t_fused = _time(lambda: dispatch.phi_matmul(ab, w, pats, pwp,
+                                                site="bench.fused",
+                                                override="fused"), reps=reps)
     mode = "tpu" if on_tpu else "interpret"
-    rows.append(f"kernels,pallas_3kernel_{mode},{t_3k:.1f},{t_3k / t_fused:.2f}x_of_fused")
-    rows.append(f"kernels,pallas_fused_{mode},{t_fused:.1f},1.00x")
+    rec(f"pallas_3kernel_{mode}", t_3k, f"{t_3k / t_fused:.2f}x_of_fused",
+        impl="pallas")
+    rec(f"pallas_fused_{mode}", t_fused, "1.00x", impl="fused")
 
+    # What the execution policy itself resolves for this shape/backend —
+    # the default every production call site now gets.
+    pol = dispatch.get_policy()
+    d = pol.resolve(site="bench.policy", m=bench_m, k_dim=K, n=N,
+                    t=pats.shape[0], q=pats.shape[1])
+    rec("policy_pick", 0.0, f"impl={d.impl}_reason={d.reason}",
+        impl=d.impl, reason=d.reason)
+
+    traffic = {}
     from repro.core.perfmodel import GemmShape, phi_kernel_traffic
     for tag, pwp_b in (("f32pwp", 4), ("int8pwp", 1)):
         tr = phi_kernel_traffic(GemmShape(M, K, N), k=16, q=128,
                                 pwp_bytes_per_el=pwp_b)
         b3, bf = tr["three_kernel"], tr["fused"]
-        rows.append(f"kernels,hbm_bytes_3kernel_{tag},{b3.total:.0f},"
-                    f"idx+residual+coo_roundtrips="
-                    f"{b3.idx_bytes + b3.residual_bytes + b3.coo_bytes:.0f}B")
-        rows.append(f"kernels,hbm_bytes_fused_{tag},{bf.total:.0f},"
-                    f"{b3.total / bf.total:.2f}x_less_traffic_than_3kernel")
-    return rows
+        traffic[tag] = {"three_kernel": b3.total, "fused": bf.total,
+                        "ratio": b3.total / bf.total}
+        rec(f"hbm_bytes_3kernel_{tag}", b3.total,
+            f"idx+residual+coo_roundtrips="
+            f"{b3.idx_bytes + b3.residual_bytes + b3.coo_bytes:.0f}B")
+        rec(f"hbm_bytes_fused_{tag}", bf.total,
+            f"{b3.total / bf.total:.2f}x_less_traffic_than_3kernel")
+
+    if json_path:
+        jax.effects_barrier()   # flush policy telemetry callbacks
+        payload = {
+            "schema": 1,
+            "backend": jax.default_backend(),
+            "shape": {"m": M, "k": K, "n": N, "bench_m": bench_m},
+            "rows": records,
+            "per_impl_us": {r["impl"]: r["us_per_call"]
+                            for r in records if "impl" in r and r["us_per_call"]},
+            "hbm_model_bytes": traffic,
+            "dispatch_decisions": [
+                {"site": s, "impl": i, "reason": r, "traces": n}
+                for (s, i, r), n in sorted(pol.decisions().items())],
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+
+    return [ "kernels,name,us_per_call,derived" ] + [
+        f"kernels,{r['name']},{r['us_per_call']:.1f},{r['derived']}"
+        for r in records]
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write structured results (default path "
+                         "BENCH_kernels.json when the flag is given bare)")
+    args = ap.parse_args()
+    print("\n".join(main(json_path=args.json)))

@@ -151,6 +151,16 @@ class CheckpointManager:
             if self._error:
                 raise self._error
 
+    def latest_extra(self) -> dict:
+        """The ``extra`` dict of the newest checkpoint without loading any
+        array data — config-affecting metadata (e.g. the persisted Phi impl
+        override) must be known before step functions are built."""
+        step = self.latest_step()
+        if step is None:
+            return {}
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f).get("extra", {})
+
     def restore_latest(self, like: Any, shardings: Any = None):
         step = self.latest_step()
         if step is None:

@@ -32,9 +32,16 @@ class PhiConfig:
     nnz_budget: float = 0.10  # static L2 capacity as fraction of M·K
     pwp_int8: bool = False    # beyond-paper: int8 PWPs w/ per-row scales
     seed: int = 0
+    # Execution override for kernels.dispatch: None = the execution policy
+    # picks per call (fused on single device, coo in SPMD regions); a name
+    # from dispatch.IMPLS forces that lowering everywhere it is safe.
+    impl: str | None = None
 
     def __post_init__(self) -> None:
         assert self.k >= 2 and self.q >= 1
+        if self.impl is not None:
+            from repro.kernels.dispatch import IMPLS  # single source of truth
+            assert self.impl in IMPLS, (self.impl, IMPLS)
 
 
 def _hamming(x: jax.Array, c: jax.Array) -> jax.Array:

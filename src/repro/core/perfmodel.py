@@ -223,6 +223,60 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
     return {"three_kernel": three, "fused": fused}
 
 
+# --------------------------------------------------- packer budget report ---
+# The fused Pallas kernel is budget-free (it contracts the L2 residual
+# densely in VMEM) but emits per-M-block l2_nnz counters; the execution
+# policy (kernels.dispatch) aggregates them per call site. This converts
+# those runtime counters into the *static* capacity a budgeted pipeline —
+# the ASIC packer of paper Sec. 4.3, or the coo/pallas lowerings' per-block
+# ``cap`` — would have needed to run the same workload without dropping a
+# single L2 entry.
+
+@dataclasses.dataclass(frozen=True)
+class PackerBudget:
+    """Observed L2 load of one dispatch site, as a packer capacity demand."""
+
+    site: str
+    executions: int             # fused-kernel launches observed
+    rows: int                   # total activation rows processed
+    block_m: int
+    k_dim: int
+    l2_nnz_total: int
+    l2_nnz_max_block: int
+    mean_density: float         # l2_nnz_total / (rows · K)
+    peak_block_density: float   # l2_nnz_max_block / (block_m · K)
+    cap_required: int           # per-M-block entry slots with zero drops
+    nnz_budget_required: float  # smallest ops.phi_matmul nnz_budget that
+                                # keeps every budgeted path drop-free
+
+
+def packer_budget_report(site_counters: dict[str, dict]) -> list["PackerBudget"]:
+    """Aggregate the execution policy's per-site l2_nnz counters.
+
+    ``site_counters`` maps site -> {executions, rows, l2_nnz_total,
+    l2_nnz_max_block, block_m, k_dim} (the dict the policy accumulates from
+    the fused kernel's audit output). The required ``nnz_budget`` inverts the
+    two capacities ``ops.phi_matmul`` derives from it: the per-block bucket
+    cap ``4·budget·block_m·K`` must cover the worst observed block, and the
+    global/chunk caps (``budget·rows·K``) must cover the observed mean.
+    """
+    out = []
+    for site, c in sorted(site_counters.items()):
+        bm, K = int(c["block_m"]), int(c["k_dim"])
+        rows = max(int(c["rows"]), 1)
+        total = int(c["l2_nnz_total"])
+        peak = int(c["l2_nnz_max_block"])
+        mean_density = total / (rows * K)
+        peak_block_density = peak / (bm * K)
+        budget = max(peak_block_density / 4.0, mean_density)
+        out.append(PackerBudget(
+            site=site, executions=int(c["executions"]), rows=rows,
+            block_m=bm, k_dim=K, l2_nnz_total=total, l2_nnz_max_block=peak,
+            mean_density=mean_density, peak_block_density=peak_block_density,
+            cap_required=peak, nnz_budget_required=budget))
+    return out
+
+
 def vgg16_gemm_shapes(img: int = 32, classes: int = 100) -> list[GemmShape]:
     """VGG-16 (CIFAR variant: 13 convs + 1 FC) as im2col GEMMs."""
     cfg = [(64, 3), (64, 64), (128, 64), (128, 128), (256, 128), (256, 256),

@@ -1,0 +1,340 @@
+"""Phi execution-policy layer: context-aware impl dispatch.
+
+The model layer never names a kernel lowering. Every production
+``phi_matmul`` call site routes through a :class:`PhiExecutionPolicy`,
+which resolves the impl **per call** — the software analogue of the Phi
+ASIC picking its execution strategy from the workload context (paper
+Sec. 4) rather than baking it into the model definition.
+
+Resolution order (first match wins):
+
+  1. per-call override        — benchmarks / oracle comparisons;
+  2. configured override      — ``PhiConfig.impl`` (``--phi-impl`` CLI flag)
+                                or the ``PHI_IMPL`` env var; a Pallas-based
+                                override (fused/pallas) is demoted to "coo"
+                                inside an SPMD region, because honoring it
+                                there would fail to compile;
+  3. SPMD gate                — inside a ``pjit``/``shard_map`` region the
+                                Pallas kernels cannot be partitioned by the
+                                CPU SPMD pipeline → "coo" (pure XLA);
+  4. transform gate           — under autodiff or vmap tracing the Pallas
+                                kernels have no VJP/batching rule → "coo"
+                                (differentiable gather/scatter XLA path);
+  5. shape gate               — the fused kernel holds a (bm, K) activation
+                                block plus a (K, bn) weight stripe in VMEM;
+                                shapes where even the smallest block config
+                                busts the VMEM budget → "coo";
+  6. default                  — "fused", the fastest single-device lowering
+                                (native on TPU, interpret mode elsewhere),
+                                with blocks from ``autotune_fused_blocks``.
+
+Telemetry: dispatch decisions are recorded at trace time (per site, impl,
+reason); the fused kernel's per-M-block ``l2_nnz`` audit counters are
+aggregated at run time via ``io_callback`` and converted by
+``core.perfmodel.packer_budget_report`` into the static capacity an ASIC
+packer (or the budgeted coo/pallas lowerings) would have needed to run the
+same workload drop-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.utils import log
+
+IMPLS = ("fused", "pallas", "coo", "ref")
+_PALLAS_IMPLS = ("fused", "pallas")
+_CKPT_KEY = "phi_impl"
+
+_tls = threading.local()
+
+
+# ----------------------------------------------------------- context probes ---
+def _axis_env_nonempty() -> bool:
+    """True inside a shard_map/pmap body trace (named axes are in scope)."""
+    try:
+        from jax._src.core import get_axis_env
+        return bool(get_axis_env().axis_sizes)
+    except Exception:  # noqa: BLE001 — jax moved this across minor versions
+        pass
+    try:
+        from jax.core import nonempty_axis_env_DO_NOT_USE as _nonempty
+        return bool(_nonempty())
+    except Exception:  # noqa: BLE001
+        return False
+
+
+@contextlib.contextmanager
+def spmd_region():
+    """Explicitly mark a dynamic extent as SPMD (the pjit step builders wrap
+    their traced bodies with this, belt-and-braces over the mesh probe)."""
+    prev = getattr(_tls, "spmd", 0)
+    _tls.spmd = prev + 1
+    try:
+        yield
+    finally:
+        _tls.spmd = prev
+
+
+def in_spmd_region() -> bool:
+    """True when the caller is being traced inside a pjit/shard_map SPMD
+    region: an explicit ``spmd_region`` annotation, an active logical-axis
+    mesh (the pjit step builders trace under ``sharding.use_rules``), or a
+    shard_map/pmap axis environment."""
+    if getattr(_tls, "spmd", 0):
+        return True
+    from repro.distributed.sharding import current_mesh
+    if current_mesh() is not None:
+        return True
+    return _axis_env_nonempty()
+
+
+@contextlib.contextmanager
+def autodiff_region():
+    """Mark a dynamic extent whose trace will be differentiated. The train
+    step builders wrap their loss+grad computation with this: under
+    scan-over-layers the body is traced *before* the JVP transform is
+    applied, so per-call tracer sniffing cannot see the upcoming backward
+    pass — the explicit signal keeps the whole extent on the
+    differentiable XLA lowering."""
+    prev = getattr(_tls, "autodiff", 0)
+    _tls.autodiff = prev + 1
+    try:
+        yield
+    finally:
+        _tls.autodiff = prev
+
+
+def in_autodiff_region() -> bool:
+    return bool(getattr(_tls, "autodiff", 0))
+
+
+def _under_transform(*arrays: Any) -> bool:
+    """True when any operand is an autodiff/vmap tracer: the Pallas kernels
+    define no VJP or batching rule, so those transforms need the XLA path."""
+    from jax.interpreters import ad, batching
+    return any(isinstance(x, (ad.JVPTracer, batching.BatchTracer))
+               for x in arrays)
+
+
+# ---------------------------------------------------------------- decisions ---
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One resolved dispatch: which lowering runs at a call site and why."""
+
+    impl: str
+    reason: str
+    site: str
+    shape: tuple            # (M, K, N, T, q)
+    backend: str
+    blocks: tuple | None = None   # fused (block_m, block_n), else None
+
+
+class PhiExecutionPolicy:
+    """Resolves ``impl`` per phi_matmul call and aggregates telemetry."""
+
+    def __init__(self, override: str | None = None, telemetry: bool = True):
+        if override is None:
+            override = os.environ.get("PHI_IMPL") or None
+        if override is not None and override not in IMPLS:
+            raise ValueError(f"unknown Phi impl override {override!r}; "
+                             f"expected one of {IMPLS}")
+        self.override = override
+        self.telemetry = telemetry and os.environ.get("PHI_TELEMETRY") != "0"
+        self._lock = threading.Lock()
+        # (site, impl, reason) -> trace count. Decisions happen at trace
+        # time, so under jit caching the counts reflect traces, not steps.
+        self._decisions: dict[tuple[str, str, str], int] = {}
+        # site -> runtime counters fed by the fused kernel's l2_nnz output.
+        self._sites: dict[str, dict] = {}
+
+    # ------------------------------------------------------------- resolve --
+    def resolve(self, *, site: str = "anon", m: int, k_dim: int, n: int,
+                t: int, q: int, override: str | None = None,
+                config_override: str | None = None,
+                transform: bool = False) -> Decision:
+        """Resolve the impl for one call. Override precedence: per-call
+        ``override`` > ``config_override`` (``PhiConfig.impl`` threaded by
+        the model layer) > the policy-level override (``PHI_IMPL`` env)."""
+        from repro.kernels import ops
+
+        for o in (override, config_override):
+            if o is not None and o not in IMPLS:
+                raise ValueError(f"unknown Phi impl override {o!r} at "
+                                 f"site {site!r}; expected one of {IMPLS}")
+        backend = jax.default_backend()
+        shape = (m, k_dim, n, t, q)
+        spmd = in_spmd_region()
+        transform = transform or in_autodiff_region()
+        ov, which = next(
+            ((o, lbl) for o, lbl in ((override, "call"),
+                                     (config_override, "config"),
+                                     (self.override, "policy"))
+             if o is not None), (None, None))
+        if ov is not None:
+            # Overrides are honored only where they can actually execute: a
+            # Pallas-based choice inside an SPMD region or a differentiated/
+            # vmapped trace, or a fused choice whose smallest block config
+            # busts VMEM, silently forces a failed compile — demote instead.
+            if spmd and ov in _PALLAS_IMPLS:
+                d = Decision("coo", f"spmd_region_demotes_{ov}", site, shape,
+                             backend)
+            elif transform and ov in _PALLAS_IMPLS:
+                d = Decision("coo", f"autodiff_demotes_{ov}", site, shape,
+                             backend)
+            elif ov == "fused" and not ops.fused_shape_viable(m, k_dim, n, t, q):
+                d = Decision("coo", "vmem_gate_demotes_fused", site, shape,
+                             backend)
+            else:
+                d = Decision(ov, f"{which}_override", site, shape, backend)
+        elif spmd:
+            d = Decision("coo", "spmd_region", site, shape, backend)
+        elif transform:
+            d = Decision("coo", "autodiff_or_vmap", site, shape, backend)
+        elif not ops.fused_shape_viable(m, k_dim, n, t, q):
+            d = Decision("coo", "fused_vmem_gate", site, shape, backend)
+        else:
+            mode = "native" if backend == "tpu" else "interpret"
+            d = Decision("fused", f"single_device_default_{mode}", site, shape,
+                         backend)
+        if d.impl == "fused":  # default or override-forced: autotune blocks
+            d = dataclasses.replace(
+                d, blocks=ops.autotune_fused_blocks(m, k_dim, n, q, t))
+        self._record_decision(d)
+        return d
+
+    def _record_decision(self, d: Decision) -> None:
+        key = (d.site, d.impl, d.reason)
+        with self._lock:
+            first = key not in self._decisions
+            self._decisions[key] = self._decisions.get(key, 0) + 1
+        if first:
+            log.info("phi dispatch: %s -> %s (%s, M=%d K=%d N=%d)",
+                     d.site, d.impl, d.reason, *d.shape[:3])
+
+    # ------------------------------------------------------------- execute --
+    def matmul(self, a: jax.Array, w: jax.Array, patterns: jax.Array,
+               pwp: jax.Array, *, site: str = "anon",
+               override: str | None = None, config_override: str | None = None,
+               nnz_budget: float = 0.08,
+               gather_dtype=None, pwp_scale=None) -> jax.Array:
+        """Policy-dispatched ``phi_matmul``: resolve the impl from context,
+        run it, and (fused path) stream the l2_nnz audit counters out."""
+        from repro.kernels import ops
+
+        K = a.shape[-1]
+        T, q, _ = patterns.shape
+        N = w.shape[-1]
+        M = int(np.prod(a.shape[:-1])) if a.ndim > 1 else 1
+        d = self.resolve(site=site, m=M, k_dim=K, n=N, t=T, q=q,
+                         override=override, config_override=config_override,
+                         transform=(in_autodiff_region()
+                                    or _under_transform(a, w, pwp)))
+        if d.impl != "fused":
+            return ops.phi_matmul(a, w, patterns, pwp, impl=d.impl,
+                                  nnz_budget=nnz_budget,
+                                  gather_dtype=gather_dtype,
+                                  pwp_scale=pwp_scale)
+        bm, bn = d.blocks
+        out, nnz = ops.phi_fused(a, patterns, pwp, w, pwp_scale=pwp_scale,
+                                 block_m=bm, block_n=bn)
+        if self.telemetry:
+            from jax.experimental import io_callback
+            bm_eff = ops.effective_block_m(M, bm)
+            io_callback(lambda v, s=site, b=bm_eff, k=K, r=M:
+                        self._record_nnz(s, b, k, r, v),
+                        None, nnz, ordered=False)
+        return out
+
+    def _record_nnz(self, site: str, block_m: int, k_dim: int, rows: int,
+                    nnz) -> None:
+        nnz = np.asarray(nnz)
+        with self._lock:
+            c = self._sites.setdefault(site, {
+                "executions": 0, "rows": 0, "l2_nnz_total": 0,
+                "l2_nnz_max_block": 0, "block_m": block_m, "k_dim": k_dim,
+            })
+            c["executions"] += 1
+            c["rows"] += rows
+            c["l2_nnz_total"] += int(nnz.sum())
+            c["l2_nnz_max_block"] = max(c["l2_nnz_max_block"],
+                                        int(nnz.max(initial=0)))
+            c["block_m"], c["k_dim"] = block_m, k_dim
+
+    # ----------------------------------------------------------- reporting --
+    def decisions(self) -> dict[tuple[str, str, str], int]:
+        with self._lock:
+            return dict(self._decisions)
+
+    def report(self) -> dict:
+        """Dispatch counts + the perfmodel packer-budget view of the
+        aggregated fused-kernel l2_nnz counters."""
+        from repro.core.perfmodel import packer_budget_report
+        with self._lock:
+            decisions = dict(self._decisions)
+            sites = {k: dict(v) for k, v in self._sites.items()}
+        return {"decisions": decisions,
+                "packer_budgets": packer_budget_report(sites)}
+
+    def log_report(self, prefix: str = "phi") -> None:
+        rep = self.report()
+        for (site, impl, reason), count in sorted(rep["decisions"].items()):
+            log.info("%s dispatch: %-28s -> %-6s %-28s %d trace(s)",
+                     prefix, site, impl, reason, count)
+        for b in rep["packer_budgets"]:
+            log.info("%s packer:   %-28s execs=%-5d l2_nnz=%-10d "
+                     "peak_block_density=%.4f -> cap_required=%d "
+                     "(nnz_budget >= %.4f)", prefix, b.site, b.executions,
+                     b.l2_nnz_total, b.peak_block_density, b.cap_required,
+                     b.nnz_budget_required)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._decisions.clear()
+            self._sites.clear()
+
+
+# ---------------------------------------------------------- default policy ---
+_default_policy = PhiExecutionPolicy()
+
+
+def get_policy() -> PhiExecutionPolicy:
+    return _default_policy
+
+
+def set_policy(policy: PhiExecutionPolicy) -> PhiExecutionPolicy:
+    global _default_policy
+    prev, _default_policy = _default_policy, policy
+    return prev
+
+
+def phi_matmul(a, w, patterns, pwp, **kwargs) -> jax.Array:
+    """Module-level shorthand: policy-dispatched Phi matmul. Accepts the
+    same keywords as :meth:`PhiExecutionPolicy.matmul` (``site``,
+    ``override``, ``nnz_budget``, ``gather_dtype``, ``pwp_scale``)."""
+    return _default_policy.matmul(a, w, patterns, pwp, **kwargs)
+
+
+# -------------------------------------------------- checkpoint persistence ---
+def checkpoint_extra(cfg) -> dict:
+    """Policy-relevant config to persist in a checkpoint's ``extra`` dict."""
+    phi = getattr(cfg, "phi", None)
+    if phi is not None and getattr(phi, "impl", None) is not None:
+        return {_CKPT_KEY: phi.impl}
+    return {}
+
+
+def apply_checkpoint_extra(cfg, extra: dict | None):
+    """Re-apply a persisted impl override onto a restored config. A live
+    override (CLI/config) wins over the checkpointed one."""
+    impl = (extra or {}).get(_CKPT_KEY)
+    phi = getattr(cfg, "phi", None)
+    if impl and phi is not None and getattr(phi, "impl", None) is None:
+        return cfg.with_(phi=dataclasses.replace(phi, impl=impl))
+    return cfg

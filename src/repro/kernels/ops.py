@@ -31,6 +31,12 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def effective_block_m(M: int, block_m: int) -> int:
+    """Block-m actually used for an M-row problem: requested size clamped to
+    the next power of two ≥ M (kernels pad M up to a whole block)."""
+    return min(block_m, max(8, 1 << (M - 1).bit_length()))
+
+
 def _pad_rows(x: jax.Array, mult: int, fill=0) -> jax.Array:
     m = x.shape[0]
     pad = (-m) % mult
@@ -60,7 +66,7 @@ def matcher(a: jax.Array, patterns: jax.Array, *, block_m: int = 256):
     K = a.shape[-1]
     a2 = a.reshape(-1, K)
     M = a2.shape[0]
-    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    bm = effective_block_m(M, block_m)
     a2 = _pad_rows(a2, bm)
     idx, res = matcher_pallas(a2, patterns, block_m=bm, interpret=_interpret())
     T = patterns.shape[0]
@@ -76,7 +82,7 @@ def l1_gather(idx: jax.Array, pwp: jax.Array, *, block_m: int = 256, block_n: in
     N = pwp.shape[-1]
     idx2 = idx.reshape(-1, T)
     M = idx2.shape[0]
-    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    bm = effective_block_m(M, block_m)
     bn = _pick_block_n(N, block_n)
     # Padding rows index the all-zero slot q.
     idx2 = _pad_rows(idx2, bm, fill=pwp.shape[1] - 1)
@@ -126,7 +132,7 @@ def phi_l2_audit(a: jax.Array, patterns: jax.Array, *, nnz_budget: float = 0.08,
     _, residual = assign_patterns(a2, patterns)
     cap = max(128, int(nnz_budget * M * K))
     rows, cols, signs, pack_over = pack_l2_coo_jit(residual, cap)
-    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    bm = effective_block_m(M, block_m)
     per_block = max(8, min(cap, int(4 * nnz_budget * bm * K)))
     G = cdiv(M, bm)
     _, _, _, bucket_drop = bucket_coo(rows, cols, signs, G * bm, bm, per_block)
@@ -158,7 +164,7 @@ def l2_spmm(rows: jax.Array, cols: jax.Array, signs: jax.Array, w: jax.Array,
             mode: str = "take"):
     """Padded COO (sentinel row == m) × w (K, N) -> (m, N) f32."""
     K, N = w.shape
-    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    bm = effective_block_m(m, block_m)
     bn = _pick_block_n(N, block_n)
     G = cdiv(m, bm)
     if cap is None:
@@ -209,13 +215,21 @@ def _fused_vmem_bytes(bm: int, bn: int, K: int, T: int, q: int) -> int:
                 + T * q * (K // T)  # patterns
                 + T * (q + 1) * bn  # PWP stripe
                 + K * bn            # weight stripe
-                + 2 * bm * bn)      # out block + accumulator
+                + 3 * bm * bn)      # out block + separate L1/L2 accumulators
 
 
 def _fused_candidates(M: int, N: int) -> list[tuple[int, int]]:
     bms = [bm for bm in (128, 256) if bm <= max(8, 1 << (M - 1).bit_length())]
     bns = [bn for bn in (128, 256, 512) if N % bn == 0] or [N]
     return [(bm, bn) for bm in bms or [128] for bn in bns]
+
+
+def fused_shape_viable(M: int, K: int, N: int, T: int, q: int) -> bool:
+    """Shape gate for the execution policy: False when even the smallest
+    fused block config busts the VMEM budget (the kernel holds the whole
+    (bm, K) activation block and (K, bn) weight stripe on-chip)."""
+    return min(_fused_vmem_bytes(bm, bn, K, T, q)
+               for bm, bn in _fused_candidates(M, N)) <= _VMEM_BUDGET_BYTES
 
 
 def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
@@ -282,7 +296,7 @@ def phi_fused(a: jax.Array, patterns: jax.Array, pwp: jax.Array, w: jax.Array,
     if block_m is None or block_n is None:
         tbm, tbn = autotune_fused_blocks(M, K, N, q, T)
         block_m, block_n = block_m or tbm, block_n or tbn
-    bm = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    bm = effective_block_m(M, block_m)
     a2 = _pad_rows(a2, bm)
     bn = _pick_block_n(N, block_n)
     if pwp_scale is None:

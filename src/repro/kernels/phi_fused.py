@@ -51,7 +51,15 @@ def _fused_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref, out_ref, nnz_ref,
     T, _, k = p_ref.shape
     q1 = q + 1
     a = a_ref[...].astype(jnp.float32)                     # (bm, K) binary
-    acc = jnp.zeros(out_ref.shape, jnp.float32)            # (bm, bn)
+    # L1 and L2 accumulate separately and are added once at the end — the
+    # same association the unfused lowerings use (out1 + out2). Since every
+    # partial product is exact (one-hot selections; ±1 residual entries),
+    # the fused output is then BITWISE identical to the "coo" path, which
+    # lets serving stacks A/B dispatch modes with exact-equality regression
+    # tests instead of tolerances. Cost: one extra (bm, bn) f32 block of
+    # VMEM, no extra HBM traffic.
+    acc1 = jnp.zeros(out_ref.shape, jnp.float32)           # (bm, bn) L1
+    acc2 = jnp.zeros(out_ref.shape, jnp.float32)           # (bm, bn) L2
     nnz = jnp.zeros((), jnp.float32)
     for t in range(T):                                     # static unroll
         at = a[:, t * k:(t + 1) * k]                       # (bm, k)
@@ -70,14 +78,14 @@ def _fused_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref, out_ref, nnz_ref,
                        preferred_element_type=jnp.float32)  # (bm, bn)
         row_scale = jnp.dot(onehot, scale_ref[t][:, None],
                             preferred_element_type=jnp.float32)  # (bm, 1)
-        acc += rows * row_scale
+        acc1 += rows * row_scale
         # -- L2 (MXU): in-register residual, contraction against W tile ----
         chosen = jnp.dot(onehot[:, :q], p, preferred_element_type=jnp.float32)
         residual = at - chosen                             # (bm, k) {−1,0,+1}
-        acc += jnp.dot(residual, w_ref[t * k:(t + 1) * k, :].astype(jnp.float32),
-                       preferred_element_type=jnp.float32)
+        acc2 += jnp.dot(residual, w_ref[t * k:(t + 1) * k, :].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
         nnz += jnp.abs(residual).sum()
-    out_ref[...] = acc
+    out_ref[...] = acc1 + acc2
     nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
 
 
@@ -112,6 +120,22 @@ def phi_fused_pallas(
     assert pwp.shape == (T, q + 1, N) and pwp_scale.shape == (T, q + 1)
     grid = (M // block_m, N // block_n)
     kernel = functools.partial(_fused_kernel, q=q)
+    # TPU megacore partitioning: both grid axes are embarrassingly parallel
+    # (each (i, j) program owns a disjoint out/nnz block and only ever
+    # accumulates locally), so Mosaic may split the grid across the two
+    # TensorCores. Interpret mode (CPU correctness runs) has no Mosaic and
+    # predates-TPUCompilerParams jax builds spell the params differently, so
+    # the annotation is applied only on the native-compile path.
+    kwargs: dict = {}
+    if not interpret:
+        semantics = ("parallel", "parallel")
+        try:
+            from jax.experimental.pallas import tpu as pltpu
+            kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+                dimension_semantics=semantics)
+        except (ImportError, AttributeError, TypeError):
+            kwargs["compiler_params"] = dict(
+                mosaic=dict(dimension_semantics=semantics))
     out, nnz = pl.pallas_call(
         kernel,
         grid=grid,
@@ -131,6 +155,7 @@ def phi_fused_pallas(
             jax.ShapeDtypeStruct((M // block_m, 1), jnp.int32),
         ],
         interpret=interpret,
+        **kwargs,
     )(a.astype(jnp.float32), patterns.astype(jnp.float32), pwp,
       pwp_scale.astype(jnp.float32), w)
     return out, nnz[:, 0]

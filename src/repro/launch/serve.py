@@ -17,6 +17,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, phi_variant
 from repro.distributed.sharding import init_params
+from repro.kernels import dispatch
 from repro.models import model
 from repro.serve.engine import Engine, Request
 from repro.utils import log
@@ -27,6 +28,9 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen1p5_4b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--phi", action="store_true")
+    ap.add_argument("--phi-impl", default=None, choices=dispatch.IMPLS,
+                    help="force one Phi kernel lowering; default: the "
+                         "execution policy picks per call (fused here)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -38,12 +42,17 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.phi:
         cfg = phi_variant(cfg, timesteps=2, q=16)
+        if args.phi_impl:
+            cfg = cfg.with_(phi=dataclasses.replace(cfg.phi, impl=args.phi_impl))
     params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(0))
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
-        step, tree, _ = mgr.restore_latest({"params": params})
+        step, tree, extra = mgr.restore_latest({"params": params})
         if step is not None:
             params = tree["params"]
+            # A persisted --phi-impl override survives restart (the live CLI
+            # flag, if given, wins inside apply_checkpoint_extra).
+            cfg = dispatch.apply_checkpoint_extra(cfg, extra)
             log.info("restored params from step %d", step)
     if args.phi:
         batch = model.dummy_batch(cfg, 2, 16, with_labels=False)

@@ -11,17 +11,17 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import get_config
+from repro.configs import get_config, phi_variant
 from repro.data.pipeline import DataConfig, LoaderState, Prefetcher, ShardedLoader
 from repro.distributed import sharding as shd
 from repro.distributed.watchdog import StepWatchdog
+from repro.kernels import dispatch
 from repro.models import model
 from repro.train import optimizer as opt
 from repro.train import step as step_lib
@@ -35,6 +35,10 @@ def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=global_batch, seed=seed)
     loader = ShardedLoader(dcfg)
     mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    if mgr is not None:
+        # A persisted Phi impl override must be re-applied before the step
+        # functions close over cfg (a live cfg.phi.impl wins over it).
+        cfg = dispatch.apply_checkpoint_extra(cfg, mgr.latest_extra())
 
     if mesh is not None:
         bundle, p_specs, o_specs, _ = step_lib.make_train_step(cfg, ocfg, mesh, rules)
@@ -47,14 +51,29 @@ def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
         p_sh = o_sh = None
 
         def step_fn_(params, opt_state, batch):
-            loss, grads = jax.value_and_grad(partial(model.train_loss, cfg))(params, batch)
-            new_params, new_opt = opt.apply_updates(params, grads, opt_state, ocfg)
-            return new_params, new_opt, loss
+            # Phi calibration state is frozen: grads/optimizer see only the
+            # trainable half (int8 patterns are non-differentiable).
+            trainable, phi_state = model.split_phi_state(params)
+            with dispatch.autodiff_region():
+                loss, grads = jax.value_and_grad(
+                    lambda tp: model.train_loss(
+                        cfg, model.merge_phi_state(tp, phi_state), batch))(trainable)
+            new_t, new_opt = opt.apply_updates(trainable, grads, opt_state, ocfg)
+            return model.merge_phi_state(new_t, phi_state), new_opt, loss
 
         step_fn = jax.jit(step_fn_, donate_argnums=(0, 1))
 
     params = shd.init_params(p_specs, jax.random.PRNGKey(seed))
-    opt_state = opt.init(params, ocfg)
+    if cfg.spiking and cfg.phi is not None:
+        # Spiking-Phi training: fill the zero-initialised Phi state from real
+        # spike statistics before the first step. Every spiking GEMM then
+        # routes through the kernels.dispatch execution policy (the autodiff
+        # gate keeps the backward pass on the differentiable XLA lowering).
+        calib = model.dummy_batch(cfg, min(global_batch, 2), seq,
+                                  with_labels=False)
+        params, _ = model.calibrate_lm_phi(cfg, params, calib)
+        log.info("phi calibrated; impl override: %s", cfg.phi.impl or "policy")
+    opt_state = opt.init(model.split_phi_state(params)[0], ocfg)
     start_step = 0
     if mgr is not None:
         got = mgr.restore_latest({"params": params, "opt": opt_state},
@@ -80,7 +99,7 @@ def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
         # NB: save the CONSUMED cursor (step+1), not loader.state — the
         # prefetcher runs ahead of consumption (caught by
         # tests/test_fault_tolerance.py).
-        consumed = {"loader": {"step": step + 1}}
+        consumed = {"loader": {"step": step + 1}, **dispatch.checkpoint_extra(cfg)}
         if verdict == "escalate" and mgr is not None:
             mgr.save(step + 1, {"params": params, "opt": opt_state}, consumed)
         if log_every and (step + 1) % log_every == 0:
@@ -90,8 +109,10 @@ def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
             mgr.save(step + 1, {"params": params, "opt": opt_state}, consumed)
     if mgr is not None:
         mgr.save(steps, {"params": params, "opt": opt_state},
-                 {"loader": {"step": steps}})
+                 {"loader": {"step": steps}, **dispatch.checkpoint_extra(cfg)})
         mgr.wait()
+    if cfg.spiking and cfg.phi is not None:
+        dispatch.get_policy().log_report(prefix="train")
     return params, losses
 
 
@@ -99,6 +120,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--phi", action="store_true",
+                    help="train the spiking+Phi variant of --arch")
+    ap.add_argument("--phi-impl", default=None, choices=dispatch.IMPLS,
+                    help="force one Phi kernel lowering; default: the "
+                         "execution policy picks per call")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -108,6 +134,11 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.phi:
+        import dataclasses
+        cfg = phi_variant(cfg, timesteps=2, q=16)
+        if args.phi_impl:
+            cfg = cfg.with_(phi=dataclasses.replace(cfg.phi, impl=args.phi_impl))
     ocfg = opt.OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                          decay_steps=args.steps)
     t0 = time.time()

@@ -10,7 +10,10 @@ Entry points (all pure functions of (cfg, params, batch)):
 Phi spiking mode (``cfg.spiking`` + ``cfg.phi``): every decoder GEMM operand
 is rate-coded into ``phi.timesteps`` binary spike trains by a local LIF
 neuron; each timestep's matmul is the Phi decomposition (L1 PWP retrieval +
-L2 ±1 COO correction) via ``kernels.ops.phi_matmul``. Given identical spikes,
+L2 ±1 COO correction) via the ``kernels.dispatch`` execution policy, which
+picks the kernel lowering per call (the model layer never names one: fused
+single-pass on a single device, the pjit-safe XLA path inside SPMD regions,
+or the ``cfg.phi.impl`` override). Given identical spikes,
 Phi mode is exact w.r.t. spiking-dense mode (the paper's losslessness claim,
 tested); rate-coded spiking itself approximates the analog model, as in all
 spiking-transformer work the paper evaluates.
@@ -30,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.patterns import PhiConfig
 from repro.distributed.sharding import ParamSpec, init_params, is_spec, shard
-from repro.kernels import ops as kops
+from repro.kernels import dispatch
 from repro.models import layers as ll
 from repro.models import mamba2, transformer
 from repro.models.config import ModelConfig
@@ -102,6 +105,45 @@ def _inject_phi_specs(cfg: ModelConfig, tree: Any) -> Any:
     return walk(tree)
 
 
+def split_phi_state(tree: Any) -> tuple[Any, dict]:
+    """Split a params(-spec) tree into (trainable, phi_state).
+
+    ``phi_*`` subtrees (patterns / PWPs / scales) are calibration-derived
+    state, not trainable parameters: the int8 patterns are non-differentiable
+    (``jax.grad`` rejects integer inputs) and PWPs are recomputed from the
+    weights by (re)calibration, not descended on. The optimizer and grad
+    transforms must only ever see the trainable half.
+    """
+    if not isinstance(tree, dict):
+        return tree, {}
+    train: dict = {}
+    frozen: dict = {}
+    for k, v in tree.items():
+        if k.startswith("phi_"):
+            frozen[k] = v
+        elif isinstance(v, dict):
+            t, f = split_phi_state(v)
+            train[k] = t
+            if f:
+                frozen[k] = f
+        else:
+            train[k] = v
+    return train, frozen
+
+
+def merge_phi_state(train: Any, frozen: dict) -> Any:
+    """Inverse of ``split_phi_state``: graft the phi state back in."""
+    if not frozen:
+        return train
+    out = dict(train)
+    for k, v in frozen.items():
+        if k in out and isinstance(out.get(k), dict) and not k.startswith("phi_"):
+            out[k] = merge_phi_state(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
 # ---------------------------------------------------------- spiking matmul ---
 # Logical (K, N) axes of every Phi-eligible weight — used to derive the
 # shard_map specs of the distributed spiking matmul.
@@ -121,16 +163,25 @@ def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=N
     'model', e.g. wo/w2 in serve mode): each device computes the partial sum
     of its K-tiles (its PWP slice + its COO columns) and a psum('model')
     completes the reduction — the Phi analogue of Megatron row-parallelism.
+
+    Which kernel lowering runs is NOT decided here: every path hands the
+    call to ``kernels.dispatch`` and the execution policy resolves the impl
+    from context — fused on a single device, the pjit-safe XLA path inside
+    the shard_map body, an explicit ``cfg.phi.impl`` override everywhere
+    it is safe.
     """
     from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import current_mesh, resolve_spec
 
+    override = cfg.phi.impl if cfg.phi is not None else None
     mesh = current_mesh()
     if mesh is None:
-        return kops.phi_matmul(spikes, w, patterns, pwp, impl="coo",
-                               nnz_budget=budget, gather_dtype=cfg.compute_dtype,
-                               pwp_scale=pwp_scale)
+        return dispatch.phi_matmul(spikes, w, patterns, pwp,
+                                   site=f"lm.{name}", config_override=override,
+                                   nnz_budget=budget,
+                                   gather_dtype=cfg.compute_dtype,
+                                   pwp_scale=pwp_scale)
     axes = _WEIGHT_AXES[name]
 
     def _ax(logical, dim):
@@ -147,14 +198,31 @@ def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=N
     k_ax = _ax(axes[0], w.shape[0])
     n_ax = _ax(axes[1], w.shape[1])
     bd = _ax("batch", spikes.shape[1])
+
+    def _names(ax):
+        return set(ax if isinstance(ax, tuple) else (ax,)) if ax is not None else set()
+
+    # A PartitionSpec may use each mesh axis at most once. Batch sharding of
+    # the spike rows wins; a weight K/N axis that would reuse one of its mesh
+    # axes (e.g. fsdp→data colliding with batch→data under TRAIN_RULES) is
+    # dropped — the weight simply replicates over that axis.
+    if _names(k_ax) & _names(bd):
+        k_ax = None
+    if _names(n_ax) & (_names(bd) | _names(k_ax)):
+        n_ax = None
     # spikes = (T, B, …, K): timestep leads, batch is dim 1.
     mid = (None,) * (spikes.ndim - 3)
 
     def body(s_loc, w_loc, pats_loc, pwp_loc, scale_loc):
         flat = s_loc.reshape(-1, s_loc.shape[-1])
-        out = kops.phi_matmul(flat, w_loc, pats_loc, pwp_loc, impl="coo",
-                              nnz_budget=budget, gather_dtype=cfg.compute_dtype,
-                              pwp_scale=scale_loc)
+        # The policy sees the shard_map axis env and resolves the SPMD-safe
+        # lowering (demoting a Pallas-based override if one is set).
+        out = dispatch.phi_matmul(flat, w_loc, pats_loc, pwp_loc,
+                                  site=f"lm.{name}.spmd",
+                                  config_override=override,
+                                  nnz_budget=budget,
+                                  gather_dtype=cfg.compute_dtype,
+                                  pwp_scale=scale_loc)
         if k_ax is not None:
             out = jax.lax.psum(out, k_ax)
         return out.reshape(s_loc.shape[:-1] + (w_loc.shape[-1],))
@@ -194,8 +262,14 @@ def make_matmul(cfg: ModelConfig):
             out = jnp.einsum("t...k,kn->t...n", spikes.astype(cfg.compute_dtype),
                              w.astype(cfg.compute_dtype))
         elif spike_impl != "phi":
-            out = kops.phi_matmul(spikes, w.astype(jnp.float32), phi_p["patterns"],
-                                  phi_p["pwp"].astype(jnp.float32), impl="ref")
+            # Oracle comparison mode (cfg.spike_impl names a lowering, e.g.
+            # "ref"): a per-call override — the one context where the model
+            # layer intentionally pins the impl.
+            out = dispatch.phi_matmul(spikes, w.astype(jnp.float32),
+                                      phi_p["patterns"],
+                                      phi_p["pwp"].astype(jnp.float32),
+                                      site=f"lm.{name}.oracle",
+                                      override=spike_impl)
         else:
             pwp_v = phi_p["pwp"]
             if pwp_v.dtype != jnp.int8:

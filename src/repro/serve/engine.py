@@ -10,6 +10,12 @@ tree. Per tick:
   3. finished slots (EOS / budget) emit results and free up.
 
 SWA/chunked archs use ring caches, so slot memory is O(window), not O(ctx).
+
+Phi mode: the engine never names a kernel impl — every spiking GEMM inside
+prefill/decode routes through the ``kernels.dispatch`` execution policy
+(fused single-pass on this single-device path unless ``cfg.phi.impl``
+overrides it). ``phi_report()`` exposes the policy's dispatch decisions and
+the aggregated l2_nnz packer budgets for the served traffic.
 """
 from __future__ import annotations
 
@@ -138,4 +144,13 @@ class Engine:
                 break
             if not self.queue and not self.active.any():
                 break
+        if self.cfg.phi is not None:
+            from repro.kernels import dispatch
+            dispatch.get_policy().log_report(prefix="serve")
         return self.results
+
+    def phi_report(self) -> dict:
+        """Execution-policy telemetry for the traffic served so far:
+        per-site dispatch decisions + l2_nnz packer budgets."""
+        from repro.kernels import dispatch
+        return dispatch.get_policy().report()

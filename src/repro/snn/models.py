@@ -5,7 +5,8 @@ is a spike tensor; ``apply(..., capture=True)`` additionally returns the
 binary activation matrices in **GEMM layout** (rows × K) — conv layers via
 im2col — which is exactly what Phi calibration, PAFT, and the op-count model
 consume. ``phi_apply`` runs inference with the calibrated Phi decomposition
-(`ops.phi_matmul`) in place of every dense matmul; without PAFT this is
+(via the `kernels.dispatch` execution policy) in place of every dense
+matmul; without PAFT this is
 bit-exact with ``apply`` (the paper's losslessness claim).
 """
 from __future__ import annotations
@@ -18,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.patterns import PhiConfig, calibrate, pattern_weight_products
-from repro.kernels import ops
 from repro.snn.lif import LIFConfig, lif_sequence
 
 
@@ -257,17 +257,39 @@ def _layer_weight(params: Params, name: str) -> np.ndarray:
 
 
 def phi_apply(
-    params: Params, cfg: SNNConfig, phi: PhiState, x: jax.Array, impl: str = "coo"
+    params: Params, cfg: SNNConfig, phi: PhiState, x: jax.Array,
+    impl: str | None = None
 ) -> jax.Array:
-    """Inference with Phi sparse matmuls substituted for every spiking GEMM."""
+    """Inference with Phi sparse matmuls substituted for every spiking GEMM.
+
+    ``impl=None`` (default) lets the execution policy pick the lowering per
+    call (fused single-pass on a single device, the pjit-safe XLA path in
+    SPMD regions); a name from ``dispatch.IMPLS`` forces one.
+    """
+    from repro.kernels import dispatch
 
     def phi_mm(a, w, name):
         if name not in phi.patterns:
             return a @ w
         pats = jnp.asarray(phi.patterns[name])
         K = pats.shape[0] * cfg.phi.k
-        out = ops.phi_matmul(a[..., :K], w[:K], pats, phi.pwp[name], impl=impl)
-        if K < a.shape[-1]:  # ragged tail handled densely
+        # Calibration covers the largest multiple of phi.k that fits the
+        # GEMM's K (``_maybe_capture`` truncates the captured activations the
+        # same way); anything else means the PhiState was calibrated for a
+        # different model/config — refuse instead of silently truncating.
+        usable_K = (a.shape[-1] // cfg.phi.k) * cfg.phi.k
+        if K != usable_K:
+            raise ValueError(
+                f"phi_apply: layer {name!r} was calibrated for K={K} but the "
+                f"forward pass produces activations with {a.shape[-1]} "
+                f"features (usable K={usable_K} at phi.k={cfg.phi.k}). The "
+                "PhiState does not match this model/config — re-run "
+                "calibrate_model with the same SNNConfig used for apply.")
+        out = dispatch.phi_matmul(
+            a[..., :K], w[:K], pats, phi.pwp[name], site=f"snn.{name}",
+            override=impl, config_override=cfg.phi.impl,
+            nnz_budget=cfg.phi.nnz_budget)
+        if K < a.shape[-1]:  # dense ragged tail (K not a multiple of phi.k)
             out = out + a[..., K:] @ w[K:]
         return out.astype(w.dtype)
 

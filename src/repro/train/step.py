@@ -7,7 +7,6 @@ serving engine, and the multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -15,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
+from repro.kernels import dispatch
 from repro.models import model
 from repro.models.config import ModelConfig
 from repro.train import optimizer as opt
@@ -109,7 +109,9 @@ def make_train_step(cfg: ModelConfig, ocfg: opt.OptConfig, mesh: Mesh,
                     rules: dict | None = None) -> StepBundle:
     rules = rules or shd.TRAIN_RULES
     param_specs = model.lm_specs(cfg)
-    ostate_specs = opt_state_specs(param_specs, ocfg)
+    # Optimizer state mirrors only the TRAINABLE half: Phi calibration state
+    # (int8 patterns / PWPs) is frozen — not differentiable, not descended.
+    ostate_specs = opt_state_specs(model.split_phi_state(param_specs)[0], ocfg)
     p_sh = shd.specs_to_shardings(param_specs, mesh, rules)
     o_sh = shd.specs_to_shardings(ostate_specs, mesh, rules)
     bspec = batch_shardings(cfg, mesh, rules)
@@ -117,17 +119,23 @@ def make_train_step(cfg: ModelConfig, ocfg: opt.OptConfig, mesh: Mesh,
                  and ocfg.grad_compress)
 
     def train_step(params, opt_state, batch):
-        with shd.use_rules(rules, mesh):
-            loss_fn = partial(model.train_loss, cfg)
+        # dispatch.spmd_region: the Phi execution policy must never emit a
+        # Pallas kernel inside this pjit-partitioned trace (belt-and-braces
+        # over its use_rules mesh probe).
+        with shd.use_rules(rules, mesh), dispatch.spmd_region(), \
+                dispatch.autodiff_region():
+            trainable, phi_state = model.split_phi_state(params)
+            loss_fn = lambda tp, b: model.train_loss(
+                cfg, model.merge_phi_state(tp, phi_state), b)
             if cross_pod:
                 from repro.train.grad_compress import pod_compressed_grads
                 loss, grads, new_ef = pod_compressed_grads(
-                    loss_fn, params, batch, opt_state["ef"], mesh)
+                    loss_fn, trainable, batch, opt_state["ef"], mesh)
                 opt_state = dict(opt_state, ef=new_ef)
             else:
-                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            new_params, new_opt = opt.apply_updates(params, grads, opt_state, ocfg)
-        return new_params, new_opt, loss
+                loss, grads = jax.value_and_grad(loss_fn)(trainable, batch)
+            new_t, new_opt = opt.apply_updates(trainable, grads, opt_state, ocfg)
+        return model.merge_phi_state(new_t, phi_state), new_opt, loss
 
     return StepBundle(
         fn=train_step,
@@ -144,7 +152,7 @@ def make_prefill(cfg: ModelConfig, mesh: Mesh, rules: dict | None = None):
     bspec = batch_shardings(cfg, mesh, rules)
 
     def prefill_fn(params, batch):
-        with shd.use_rules(rules, mesh):
+        with shd.use_rules(rules, mesh), dispatch.spmd_region():
             return model.prefill(cfg, params, batch)
 
     return prefill_fn, param_specs, p_sh, bspec
@@ -157,7 +165,7 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, rules: dict | None = None):
     bd = shd.resolve_spec(("batch",), rules, mesh)[0]
 
     def decode_fn(params, token, pos, caches, embeds=None):
-        with shd.use_rules(rules, mesh):
+        with shd.use_rules(rules, mesh), dispatch.spmd_region():
             return model.decode_step(cfg, params, token, pos, caches, embeds=embeds)
 
     tok_sh = NamedSharding(mesh, P(bd))

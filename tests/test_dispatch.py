@@ -1,0 +1,352 @@
+"""Execution-policy dispatch: context gates, overrides, persistence, and the
+phi-LM decode parity acceptance test.
+
+The policy (``kernels/dispatch.py``) must pick ``fused`` on the plain
+single-device path, fall back to ``coo`` inside pjit/shard_map SPMD regions
+and under autodiff/vmap tracing, honor explicit overrides (demoting unsafe
+ones in SPMD), and persist a config override across a checkpoint
+save/restore round-trip. The acceptance test asserts phi-LM decode logits
+are BIT-identical between a forced-``coo`` run and a policy-dispatched
+(``fused``) run.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.patterns import PhiConfig, calibrate, pattern_weight_products
+from repro.kernels import dispatch, ops
+
+
+@pytest.fixture(autouse=True)
+def _fresh_policy():
+    dispatch.get_policy().reset()
+    yield
+    dispatch.get_policy().reset()
+
+
+@pytest.fixture(scope="module")
+def small_phi():
+    rng = np.random.default_rng(0)
+    protos = (rng.random((6, 64)) < 0.25).astype(np.float32)
+    a = np.abs(protos[rng.integers(0, 6, 96)]
+               - (rng.random((96, 64)) < 0.05)).astype(np.float32)
+    w = rng.standard_normal((64, 128)).astype(np.float32)
+    pats = calibrate(a, PhiConfig(k=16, q=16, iters=6))
+    pwp = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w))
+    return jnp.asarray(a), jnp.asarray(w), jnp.asarray(pats), pwp
+
+
+# ------------------------------------------------------------------- gates ---
+def test_single_device_default_is_fused(small_phi):
+    a, w, pats, pwp = small_phi
+    pol = dispatch.get_policy()
+    out = pol.matmul(a, w, pats, pwp, site="t.single")
+    ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    dec = pol.decisions()
+    assert any(s == "t.single" and i == "fused" and "single_device" in r
+               for (s, i, r) in dec)
+    # fused decisions carry autotuned blocks
+    d = pol.resolve(site="t.single2", m=96, k_dim=64, n=128, t=4, q=16)
+    assert d.impl == "fused" and d.blocks is not None
+    # runtime telemetry: the l2_nnz audit counters were streamed out
+    jax.effects_barrier()
+    rep = pol.report()
+    budgets = {b.site: b for b in rep["packer_budgets"]}
+    assert "t.single" in budgets and budgets["t.single"].l2_nnz_total > 0
+    assert budgets["t.single"].nnz_budget_required > 0
+
+
+def test_shard_map_trace_resolves_coo(small_phi):
+    from repro.compat import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    a, w, pats, pwp = small_phi
+    pol = dispatch.get_policy()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    f = shard_map(lambda a_, w_: dispatch.phi_matmul(a_, w_, pats, pwp,
+                                                     site="t.shmap"),
+                  mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                  check_vma=False)
+    out = f(a, w)
+    ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    assert ("t.shmap", "coo", "spmd_region") in pol.decisions()
+
+
+def test_mesh_context_and_explicit_region_resolve_coo(small_phi):
+    from jax.sharding import Mesh
+    from repro.distributed import sharding as shd
+
+    a, w, pats, pwp = small_phi
+    pol = dispatch.get_policy()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with shd.use_rules(shd.SERVE_RULES, mesh):
+        dispatch.phi_matmul(a, w, pats, pwp, site="t.mesh")
+    with dispatch.spmd_region():
+        assert dispatch.in_spmd_region()
+        dispatch.phi_matmul(a, w, pats, pwp, site="t.region")
+    assert not dispatch.in_spmd_region()
+    dec = pol.decisions()
+    assert ("t.mesh", "coo", "spmd_region") in dec
+    assert ("t.region", "coo", "spmd_region") in dec
+
+
+def test_autodiff_and_vmap_resolve_coo(small_phi):
+    a, w, pats, pwp = small_phi
+    pol = dispatch.get_policy()
+    g = jax.grad(lambda w_: dispatch.phi_matmul(a, w_, pats, pwp,
+                                                site="t.grad").sum())(w)
+    assert np.isfinite(np.asarray(g)).all() and float(jnp.abs(g).sum()) > 0
+    vout = jax.vmap(lambda a_: dispatch.phi_matmul(a_, w, pats, pwp,
+                                                   site="t.vmap"))(
+        a.reshape(4, 24, 64))
+    ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
+    np.testing.assert_allclose(np.asarray(vout).reshape(96, 128),
+                               np.asarray(ref), rtol=1e-4, atol=1e-3)
+    dec = pol.decisions()
+    assert ("t.grad", "coo", "autodiff_or_vmap") in dec
+    assert ("t.vmap", "coo", "autodiff_or_vmap") in dec
+
+
+def test_vmem_shape_gate_falls_back_to_coo():
+    pol = dispatch.get_policy()
+    # K so large that even the smallest block config busts the VMEM budget.
+    assert not ops.fused_shape_viable(256, 1 << 16, 512, 1 << 12, 128)
+    d = pol.resolve(site="t.vmem", m=256, k_dim=1 << 16, n=512,
+                    t=1 << 12, q=128)
+    assert d.impl == "coo" and d.reason == "fused_vmem_gate"
+
+
+# --------------------------------------------------------------- overrides ---
+def test_overrides_honored_and_demoted_in_spmd(small_phi):
+    a, w, pats, pwp = small_phi
+    pol = dispatch.get_policy()
+    out = pol.matmul(a, w, pats, pwp, site="t.ov", override="pallas",
+                     nnz_budget=0.5)
+    ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    assert ("t.ov", "pallas", "call_override") in pol.decisions()
+    # config-level override (PhiConfig.impl threaded by the model layer)
+    d = pol.resolve(site="t.cfg", m=96, k_dim=64, n=128, t=4, q=16,
+                    config_override="coo")
+    assert d.impl == "coo" and d.reason == "config_override"
+    # per-call beats config
+    d = pol.resolve(site="t.prec", m=96, k_dim=64, n=128, t=4, q=16,
+                    override="ref", config_override="coo")
+    assert d.impl == "ref" and d.reason == "call_override"
+    # policy-level override (PHI_IMPL env)
+    env_pol = dispatch.PhiExecutionPolicy(override="ref")
+    d = env_pol.resolve(site="t.pol", m=96, k_dim=64, n=128, t=4, q=16)
+    assert d.impl == "ref" and d.reason == "policy_override"
+    # Pallas-based override is demoted inside an SPMD region
+    with dispatch.spmd_region():
+        d = pol.resolve(site="t.demote", m=96, k_dim=64, n=128, t=4, q=16,
+                        override="fused")
+        assert d.impl == "coo" and "demotes_fused" in d.reason
+        # "ref" is pure XLA: safe to honor even in SPMD
+        d = pol.resolve(site="t.refok", m=96, k_dim=64, n=128, t=4, q=16,
+                        override="ref")
+        assert d.impl == "ref"
+    # ... and under a differentiated trace (e.g. --phi-impl fused training)
+    with dispatch.autodiff_region():
+        d = pol.resolve(site="t.addem", m=96, k_dim=64, n=128, t=4, q=16,
+                        override="fused")
+        assert d.impl == "coo" and d.reason == "autodiff_demotes_fused"
+    # ... and where the fused VMEM gate fails
+    d = pol.resolve(site="t.vmdem", m=256, k_dim=1 << 16, n=512, t=1 << 12,
+                    q=128, override="fused")
+    assert d.impl == "coo" and d.reason == "vmem_gate_demotes_fused"
+    with pytest.raises(ValueError, match="unknown Phi impl"):
+        pol.resolve(site="t.bad", m=96, k_dim=64, n=128, t=4, q=16,
+                    override="nope")
+    with pytest.raises(ValueError, match="unknown Phi impl"):
+        dispatch.PhiExecutionPolicy(override="nope")
+
+
+def test_phi_config_validates_impl():
+    with pytest.raises(AssertionError):
+        PhiConfig(impl="bogus")
+    assert PhiConfig(impl="fused").impl == "fused"
+
+
+# ------------------------------------------------- checkpoint round-trip ----
+def test_impl_override_survives_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config, phi_variant
+
+    cfg = phi_variant(get_config("olmo_1b", smoke=True), timesteps=2, q=16)
+    cfg = cfg.with_(phi=dataclasses.replace(cfg.phi, impl="coo"))
+    extra = dispatch.checkpoint_extra(cfg)
+    assert extra == {"phi_impl": "coo"}
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"x": jnp.arange(4.0)}
+    mgr.save(3, tree, {"loader": {"step": 3}, **extra})
+    assert mgr.latest_extra()["phi_impl"] == "coo"
+
+    # restore onto a config with no live override -> checkpointed one applies
+    fresh = phi_variant(get_config("olmo_1b", smoke=True), timesteps=2, q=16)
+    restored = dispatch.apply_checkpoint_extra(fresh, mgr.latest_extra())
+    assert restored.phi.impl == "coo"
+    # a live override wins over the checkpointed one
+    live = fresh.with_(phi=dataclasses.replace(fresh.phi, impl="pallas"))
+    assert dispatch.apply_checkpoint_extra(
+        live, mgr.latest_extra()).phi.impl == "pallas"
+    # non-phi configs pass through untouched
+    plain = get_config("olmo_1b", smoke=True)
+    assert dispatch.apply_checkpoint_extra(plain, mgr.latest_extra()) is plain
+
+
+# ------------------------------------------------------- phi_apply (SNN) ----
+def _mlp_setup():
+    from repro.snn import models
+    cfg = models.SNNConfig(kind="mlp", widths=(32,), input_size=8,
+                           timesteps=2, phi=PhiConfig(k=16, q=8, iters=4))
+    params = models.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((12, 8, 8, 3)), jnp.float32)
+    phi, _ = models.calibrate_model(params, cfg, x)
+    return models, cfg, params, phi, x
+
+
+def test_phi_apply_routes_through_policy():
+    models, cfg, params, phi, x = _mlp_setup()
+    pol = dispatch.get_policy()
+    out_pol = models.phi_apply(params, cfg, phi, x)
+    out_coo = models.phi_apply(params, cfg, phi, x, impl="coo")
+    np.testing.assert_allclose(np.asarray(out_pol), np.asarray(out_coo),
+                               rtol=1e-4, atol=1e-4)
+    dec = pol.decisions()
+    assert any(s.startswith("snn.") and i == "fused" for (s, i, _) in dec)
+    assert any(s.startswith("snn.") and i == "coo" and r == "call_override"
+               for (s, i, r) in dec)
+
+
+def test_phi_apply_k_mismatch_raises_instead_of_truncating():
+    models, cfg, params, phi, x = _mlp_setup()
+    # PhiState calibrated for a different model: drop one K-tile of 'head'
+    bad = models.PhiState(
+        patterns={"head": phi.patterns["head"][:-1]},
+        pwp={"head": phi.pwp["head"][:-1]},
+    )
+    with pytest.raises(ValueError, match="calibrated for K="):
+        models.phi_apply(params, cfg, bad, x)
+
+
+# --------------------------------------------------- spiking-Phi training ---
+def test_phi_training_paths_dispatch_coo():
+    """Spiking-Phi training end-to-end: the autodiff region keeps every
+    spiking GEMM on the differentiable XLA lowering (scan-over-layers hides
+    JVP tracers, so this exercises the explicit ``autodiff_region`` gate),
+    and the Phi calibration state stays frozen (int8 patterns would
+    otherwise make ``jax.grad`` fail)."""
+    from repro.configs import get_config, phi_variant
+    from repro.launch.train import train_loop
+    from repro.train import optimizer as opt
+
+    pol = dispatch.get_policy()
+    cfg = phi_variant(get_config("olmo_1b", smoke=True), timesteps=2, q=16)
+    ocfg = opt.OptConfig(lr=1e-3, warmup_steps=1, decay_steps=2)
+    params, losses = train_loop(cfg, ocfg, steps=2, global_batch=2, seq=16,
+                                log_every=0)
+    assert np.isfinite(losses).all()
+    assert any(s.startswith("lm.") and i == "coo" and r == "autodiff_or_vmap"
+               for (s, i, r) in pol.decisions())
+    # calibration state came through the step untouched (frozen)
+    from repro.models import model
+    _, phi_state = model.split_phi_state(params)
+    assert phi_state, "phi state missing from trained params"
+
+
+def test_phi_train_step_under_mesh_dispatches_coo():
+    from jax.sharding import Mesh
+    from repro.configs import get_config, phi_variant
+    from repro.distributed import sharding as shd
+    from repro.models import model
+    from repro.train import optimizer as opt
+    from repro.train import step as step_lib
+
+    pol = dispatch.get_policy()
+    cfg = phi_variant(get_config("olmo_1b", smoke=True), timesteps=2, q=16)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    ocfg = opt.OptConfig(lr=1e-3, warmup_steps=1, decay_steps=2)
+    bundle, p_specs, o_specs, _ = step_lib.make_train_step(cfg, ocfg, mesh)
+    params = shd.init_params(p_specs, jax.random.PRNGKey(0))
+    batch = model.dummy_batch(cfg, 2, 16, with_labels=True)
+    opt_state = opt.init(model.split_phi_state(params)[0], ocfg)
+    new_params, _, loss = bundle.fn(params, opt_state, batch)
+    assert np.isfinite(float(loss))
+    assert jax.tree.structure(new_params) == jax.tree.structure(params)
+    # inside the pjit body every phi GEMM resolved an SPMD-safe lowering
+    lm_impls = {i for (s, i, _) in pol.decisions() if s.startswith("lm.")}
+    assert lm_impls == {"coo"}, pol.decisions()
+
+
+# ----------------------------------------- acceptance: phi-LM decode parity --
+def test_phi_lm_decode_bit_identical_coo_vs_policy():
+    """Acceptance: phi-LM decode logits are BIT-identical between a
+    forced-``coo`` run and a policy-dispatched run (which resolves
+    ``fused`` on this single-device path — asserted via telemetry).
+
+    Bitwise equality across two genuinely different lowerings is only
+    meaningful when the arithmetic itself is exact, so the params are
+    snapped to a dyadic grid (multiples of 2^-10): every Phi partial
+    product (one-hot PWP selections, ±1 residual × weight) is then exactly
+    representable and every summation order yields the same floats — the
+    paper's losslessness claim, transported to float hardware. The fused
+    kernel's separate L1/L2 accumulators (matching the unfused out1+out2
+    association) keep this exact for any dispatch mode.
+    """
+    from repro.configs import get_config, phi_variant
+    from repro.distributed.sharding import init_params
+    from repro.models import model
+
+    cfg = phi_variant(get_config("olmo_1b", smoke=True), timesteps=2, q=16)
+    params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(1))
+    params = jax.tree.map(lambda x: jnp.round(x * 1024) / 1024, params)
+    batch = model.dummy_batch(cfg, 2, 8, with_labels=False,
+                              key=jax.random.PRNGKey(2))
+    params, stats = model.calibrate_lm_phi(cfg, params, batch)
+    maxd = max(s.l2_density for s in stats.values())
+    cfg = cfg.with_(phi=dataclasses.replace(cfg.phi,
+                                            nnz_budget=min(0.9, 2 * maxd + 0.05)))
+
+    def decode_run(c, steps=2):
+        logits, caches = model.prefill(c, params, batch)
+        caches = model.extend_caches(c, caches, 8 + steps + 1)
+        outs = [np.asarray(logits)]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for t in range(steps):
+            pos = jnp.full((2,), 8 + t, jnp.int32)
+            logits, caches = model.decode_step(c, params, tok, pos, caches)
+            outs.append(np.asarray(logits))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return outs
+
+    pol = dispatch.get_policy()
+    out_policy = decode_run(cfg)
+    out_coo = decode_run(cfg.with_(phi=dataclasses.replace(cfg.phi,
+                                                           impl="coo")))
+    for got, want in zip(out_policy, out_coo):
+        assert np.array_equal(got, want), \
+            f"decode logits differ by {np.abs(got - want).max()}"
+
+    dec = pol.decisions()
+    # policy run executed the LM GEMMs via fused ...
+    fused_sites = {s for (s, i, _) in dec
+                   if i == "fused" and s.startswith("lm.")}
+    assert fused_sites, dec
+    # ... and the forced run via the coo config override
+    assert any(i == "coo" and r == "config_override" and s.startswith("lm.")
+               for (s, i, r) in dec), dec
+    # runtime telemetry captured the packer budget of the served GEMMs
+    jax.effects_barrier()
+    budgets = {b.site for b in pol.report()["packer_budgets"]}
+    assert budgets & fused_sites
