@@ -135,15 +135,67 @@ def main(json_path: str | None = None) -> list[str]:
         rec(f"hbm_bytes_fused_{tag}", bf.total,
             f"{b3.total / bf.total:.2f}x_less_traffic_than_3kernel")
 
+    # ---- large-K: the K-streaming fused kernel vs the old coo demotion ----
+    # K=16384 is the shape class the PR 2 policy demoted to "coo" (the
+    # all-resident fused kernel's VMEM gate); the streaming kernel keeps it
+    # on the fused dataflow. Benchmarked at a small M/q so the interpret-
+    # mode run stays cheap; the HBM model is the cross-backend claim.
+    import os
+    Ml, Kl, Nl, ql = (1024 if on_tpu else 128), 16384, 512, 16
+    Tl = Kl // 16
+    al = jnp.asarray((rng.random((Ml, Kl)) < 0.08), jnp.float32)
+    wl = jnp.asarray(rng.standard_normal((Kl, Nl)), jnp.float32)
+    patsl = jnp.asarray(calibrate(np.asarray(al),
+                                  PhiConfig(k=16, q=ql, iters=3)))
+    pwpl = pattern_weight_products(patsl, wl)
+    dl = pol.resolve(site="bench.largeK_policy", m=Ml, k_dim=Kl, n=Nl,
+                     t=Tl, q=ql)
+    rec("policy_pick_largeK", 0.0, f"impl={dl.impl}_reason={dl.reason}",
+        impl=dl.impl, reason=dl.reason,
+        blocks=list(dl.blocks or ()), shape=[Ml, Kl, Nl])
+    t_stream = _time(lambda: dispatch.phi_matmul(
+        al, wl, patsl, pwpl, site="bench.stream", override="fused_stream"),
+        reps=reps)
+    rec("largeK_fused_stream_" + mode, t_stream, "1.00x",
+        impl="fused_stream", shape=[Ml, Kl, Nl])
+    prev_chunk = os.environ.get("PHI_CHUNK_ROWS")
+    os.environ["PHI_CHUNK_ROWS"] = "128"   # keep the XLA scatter run small
+    try:
+        t_coo_lk = _time(lambda: dispatch.phi_matmul(
+            al, wl, patsl, pwpl, site="bench.largeK_coo", override="coo"),
+            reps=reps)
+    finally:
+        if prev_chunk is None:
+            os.environ.pop("PHI_CHUNK_ROWS", None)
+        else:
+            os.environ["PHI_CHUNK_ROWS"] = prev_chunk
+    rec("largeK_coo_" + mode, t_coo_lk,
+        f"{t_coo_lk / t_stream:.2f}x_of_fused_stream", impl="coo",
+        shape=[Ml, Kl, Nl])
+    for tag, pwp_b in (("f32pwp", 4), ("int8pwp", 1)):
+        trl = phi_kernel_traffic(GemmShape(Ml, Kl, Nl), k=16, q=ql,
+                                 block_n=512, pwp_bytes_per_el=pwp_b)
+        b3, bs = trl["three_kernel"], trl["fused_stream"]
+        traffic[f"largeK_{tag}"] = {
+            "three_kernel": b3.total, "fused_stream": bs.total,
+            "ratio": b3.total / bs.total}
+        rec(f"hbm_bytes_largeK_stream_{tag}", bs.total,
+            f"{b3.total / bs.total:.2f}x_less_traffic_than_3kernel")
+
     if json_path:
         jax.effects_barrier()   # flush policy telemetry callbacks
         payload = {
-            "schema": 1,
+            "schema": 2,
             "backend": jax.default_backend(),
             "shape": {"m": M, "k": K, "n": N, "bench_m": bench_m},
+            "large_k_shape": {"m": Ml, "k": Kl, "n": Nl},
             "rows": records,
+            # primary-shape rows only (large-K rows carry a "shape" key and
+            # would otherwise clobber the per-impl summary)
             "per_impl_us": {r["impl"]: r["us_per_call"]
-                            for r in records if "impl" in r and r["us_per_call"]},
+                            for r in records
+                            if "impl" in r and r["us_per_call"]
+                            and "shape" not in r},
             "hbm_model_bytes": traffic,
             "dispatch_decisions": [
                 {"site": s, "impl": i, "reason": r, "traces": n}

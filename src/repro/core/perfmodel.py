@@ -184,11 +184,18 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
                        block_m: int = 256, block_n: int = 256,
                        nnz_budget: float = 0.08, pwp_bytes_per_el: int = 4,
                        w_bytes_per_el: int = 4) -> dict[str, KernelTraffic]:
-    """HBM bytes of the 3-kernel pipeline vs the fused single-pass kernel.
+    """HBM bytes of the 3-kernel pipeline vs the fused single-pass kernels.
 
-    Returns {"three_kernel": ..., "fused": ...}. The fused savings are the
-    index and residual round-trips, the per-M-stripe pattern re-fetches, and
-    the collapse of two partial (M, N) f32 outputs into one write.
+    Returns {"three_kernel": ..., "fused": ..., "fused_stream": ...}. The
+    fused savings are the index and residual round-trips, the per-M-stripe
+    pattern re-fetches, and the collapse of two partial (M, N) f32 outputs
+    into one write. The K-streaming variant keeps every one of those
+    savings — activations and weights are still fetched once per M-stripe
+    per N-block and there is still no index/residual round-trip — but its
+    manually-DMA'd operands are not held across grid steps by the pipeline
+    revisit rule, so the activation block and pattern groups are re-streamed
+    per N-block (a (gn−1)·M·K cost the all-resident kernel avoids; gn == 1
+    for the large-K layer shapes the streaming path exists for).
     """
     M, K, N = shape.m, shape.k, shape.n
     T = K // k
@@ -220,7 +227,18 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
         coo_bytes=0.0,                             # no packing stage
         out_bytes=M * N * f32 + gm * 4,            # single write + nnz audit
     )
-    return {"three_kernel": three, "fused": fused}
+    fused_stream = KernelTraffic(
+        a_bytes=gn * M * K * f32,                  # group DMAs per (i, j)
+        patterns_bytes=gm * gn * T * q * k * f32,  # group DMAs per (i, j)
+        pwp_bytes=pwp_stream,                      # (q+1, bn) stripes: same
+        w_bytes=w_stream,                          # (gk, bn) stripes: same
+        idx_bytes=0.0,                             # lives in registers
+        residual_bytes=0.0,                        # lives in registers
+        coo_bytes=0.0,                             # no packing stage
+        out_bytes=M * N * f32 + gm * 4,            # single write + nnz audit
+    )
+    return {"three_kernel": three, "fused": fused,
+            "fused_stream": fused_stream}
 
 
 # --------------------------------------------------- packer budget report ---

@@ -23,7 +23,12 @@ Resolution order (first match wins):
   5. shape gate               — the fused kernel holds a (bm, K) activation
                                 block plus a (K, bn) weight stripe in VMEM;
                                 shapes where even the smallest block config
-                                busts the VMEM budget → "coo";
+                                busts the VMEM budget → "fused_stream" (the
+                                K-streaming fused kernel: only a group of
+                                K-partitions resident, double-buffered
+                                HBM→VMEM copies); only shapes where even
+                                streaming busts VMEM (pathological pattern
+                                counts) → "coo";
   6. default                  — "fused", the fastest single-device lowering
                                 (native on TPU, interpret mode elsewhere),
                                 with blocks from ``autotune_fused_blocks``.
@@ -48,8 +53,9 @@ import numpy as np
 
 from repro.utils import log
 
-IMPLS = ("fused", "pallas", "coo", "ref")
-_PALLAS_IMPLS = ("fused", "pallas")
+IMPLS = ("fused", "fused_stream", "pallas", "coo", "ref")
+_PALLAS_IMPLS = ("fused", "fused_stream", "pallas")
+_FUSED_IMPLS = ("fused", "fused_stream")   # emit the l2_nnz audit counter
 _CKPT_KEY = "phi_impl"
 
 _tls = threading.local()
@@ -133,7 +139,9 @@ class Decision:
     site: str
     shape: tuple            # (M, K, N, T, q)
     backend: str
-    blocks: tuple | None = None   # fused (block_m, block_n), else None
+    # fused: (block_m, block_n); fused_stream: (block_m, block_n, group_t)
+    # — the K-group depth rides along so telemetry can report it; else None.
+    blocks: tuple | None = None
 
 
 class PhiExecutionPolicy:
@@ -177,35 +185,53 @@ class PhiExecutionPolicy:
                                      (config_override, "config"),
                                      (self.override, "policy"))
              if o is not None), (None, None))
+        mode = "native" if backend == "tpu" else "interpret"
         if ov is not None:
             # Overrides are honored only where they can actually execute: a
             # Pallas-based choice inside an SPMD region or a differentiated/
-            # vmapped trace, or a fused choice whose smallest block config
-            # busts VMEM, silently forces a failed compile — demote instead.
+            # vmapped trace silently forces a failed compile — demote. A
+            # "fused" choice whose smallest block config busts VMEM streams
+            # its K axis instead (same fused dataflow, group-resident), and
+            # only falls to "coo" when even streaming doesn't fit.
             if spmd and ov in _PALLAS_IMPLS:
                 d = Decision("coo", f"spmd_region_demotes_{ov}", site, shape,
                              backend)
             elif transform and ov in _PALLAS_IMPLS:
                 d = Decision("coo", f"autodiff_demotes_{ov}", site, shape,
                              backend)
-            elif ov == "fused" and not ops.fused_shape_viable(m, k_dim, n, t, q):
-                d = Decision("coo", "vmem_gate_demotes_fused", site, shape,
-                             backend)
+            elif ov in _FUSED_IMPLS and (
+                    gate := ops.fused_shape_viable(m, k_dim, n, t, q)) != ov:
+                if gate == "coo":
+                    d = Decision("coo", f"vmem_gate_demotes_{ov}", site,
+                                 shape, backend)
+                elif ov == "fused":          # gate == "fused_stream"
+                    d = Decision("fused_stream", "vmem_gate_streams_fused",
+                                 site, shape, backend)
+                else:                        # "fused_stream" on a roomier
+                    d = Decision(ov, f"{which}_override", site, shape,
+                                 backend)    # shape: still executable
             else:
                 d = Decision(ov, f"{which}_override", site, shape, backend)
         elif spmd:
             d = Decision("coo", "spmd_region", site, shape, backend)
         elif transform:
             d = Decision("coo", "autodiff_or_vmap", site, shape, backend)
-        elif not ops.fused_shape_viable(m, k_dim, n, t, q):
-            d = Decision("coo", "fused_vmem_gate", site, shape, backend)
         else:
-            mode = "native" if backend == "tpu" else "interpret"
-            d = Decision("fused", f"single_device_default_{mode}", site, shape,
-                         backend)
+            gate = ops.fused_shape_viable(m, k_dim, n, t, q)
+            if gate == "coo":
+                d = Decision("coo", "fused_vmem_gate", site, shape, backend)
+            elif gate == "fused_stream":
+                d = Decision("fused_stream", f"vmem_gate_k_stream_{mode}",
+                             site, shape, backend)
+            else:
+                d = Decision("fused", f"single_device_default_{mode}", site,
+                             shape, backend)
         if d.impl == "fused":  # default or override-forced: autotune blocks
             d = dataclasses.replace(
                 d, blocks=ops.autotune_fused_blocks(m, k_dim, n, q, t))
+        elif d.impl == "fused_stream":
+            d = dataclasses.replace(
+                d, blocks=ops.autotune_stream_blocks(m, k_dim, n, q, t))
         self._record_decision(d)
         return d
 
@@ -232,40 +258,52 @@ class PhiExecutionPolicy:
         T, q, _ = patterns.shape
         N = w.shape[-1]
         M = int(np.prod(a.shape[:-1])) if a.ndim > 1 else 1
+        # patterns must be sniffed too: a vmap that batches only the pattern
+        # bank (per-layer pattern sets) otherwise dispatches to a Pallas
+        # impl with no batching rule and fails to compile.
         d = self.resolve(site=site, m=M, k_dim=K, n=N, t=T, q=q,
                          override=override, config_override=config_override,
                          transform=(in_autodiff_region()
-                                    or _under_transform(a, w, pwp)))
-        if d.impl != "fused":
+                                    or _under_transform(a, w, patterns, pwp)))
+        if d.impl not in _FUSED_IMPLS:
             return ops.phi_matmul(a, w, patterns, pwp, impl=d.impl,
                                   nnz_budget=nnz_budget,
                                   gather_dtype=gather_dtype,
                                   pwp_scale=pwp_scale)
-        bm, bn = d.blocks
-        out, nnz = ops.phi_fused(a, patterns, pwp, w, pwp_scale=pwp_scale,
-                                 block_m=bm, block_n=bn)
+        if d.impl == "fused":
+            bm, bn = d.blocks
+            group_t = 0                    # all K-partitions resident
+            out, nnz = ops.phi_fused(a, patterns, pwp, w, pwp_scale=pwp_scale,
+                                     block_m=bm, block_n=bn)
+        else:
+            bm, bn, group_t = d.blocks
+            out, nnz = ops.phi_fused_stream(a, patterns, pwp, w,
+                                            pwp_scale=pwp_scale,
+                                            block_m=bm, block_n=bn,
+                                            group_t=group_t)
         if self.telemetry:
             from jax.experimental import io_callback
             bm_eff = ops.effective_block_m(M, bm)
-            io_callback(lambda v, s=site, b=bm_eff, k=K, r=M:
-                        self._record_nnz(s, b, k, r, v),
+            io_callback(lambda v, s=site, b=bm_eff, k=K, r=M, g=group_t:
+                        self._record_nnz(s, b, k, r, v, group_t=g),
                         None, nnz, ordered=False)
         return out
 
     def _record_nnz(self, site: str, block_m: int, k_dim: int, rows: int,
-                    nnz) -> None:
+                    nnz, group_t: int = 0) -> None:
         nnz = np.asarray(nnz)
         with self._lock:
             c = self._sites.setdefault(site, {
                 "executions": 0, "rows": 0, "l2_nnz_total": 0,
                 "l2_nnz_max_block": 0, "block_m": block_m, "k_dim": k_dim,
+                "group_t": group_t,
             })
             c["executions"] += 1
             c["rows"] += rows
             c["l2_nnz_total"] += int(nnz.sum())
             c["l2_nnz_max_block"] = max(c["l2_nnz_max_block"],
                                         int(nnz.max(initial=0)))
-            c["block_m"], c["k_dim"] = block_m, k_dim
+            c["block_m"], c["k_dim"], c["group_t"] = block_m, k_dim, group_t
 
     # ----------------------------------------------------------- reporting --
     def decisions(self) -> dict[tuple[str, str, str], int]:

@@ -21,7 +21,7 @@ from repro.core.patterns import PhiConfig, pattern_weight_products  # noqa: F401
 from repro.kernels import ref
 from repro.kernels.lif import lif_pallas
 from repro.kernels.matcher import matcher_pallas
-from repro.kernels.phi_fused import phi_fused_pallas
+from repro.kernels.phi_fused import phi_fused_pallas, phi_fused_stream_pallas
 from repro.kernels.phi_gather import l1_gather_pallas
 from repro.kernels.phi_spmm import l2_spmm_pallas
 from repro.utils import cdiv
@@ -99,9 +99,21 @@ def bucket_coo(rows: jax.Array, cols: jax.Array, signs: jax.Array, m: int,
     rows must be ascending (sentinel == m last), as produced by
     ``pack_l2_coo_jit``. Returns (G, cap) local rows (sentinel block_m),
     (G, cap) cols, (G, cap) signs, and per-block overflow dropped count.
+
+    Sentinel padding never consumes capacity and is never counted dropped:
+    the packer emits sentinels with sign == 0 after all real (sign ±1)
+    entries, so clamping the span boundaries to the real-entry count
+    excludes them. Without the clamp, a caller whose ``m = G·block_m``
+    exceeds the packer's true M (M not a multiple of the effective block)
+    would find the sentinel rows *inside* the last block's searchsorted
+    span — ``dropped`` then reports a capacity overflow that never
+    happened, poisoning the ``phi_l2_audit`` contract.
     """
     G = cdiv(m, block_m)
-    starts = jnp.searchsorted(rows, jnp.arange(G + 1) * block_m, side="left")
+    n_valid = (signs != 0).sum()
+    starts = jnp.minimum(
+        jnp.searchsorted(rows, jnp.arange(G + 1) * block_m, side="left"),
+        n_valid)
     take = starts[:-1, None] + jnp.arange(cap)[None, :]            # (G, cap)
     valid = take < starts[1:, None]
     take_c = jnp.clip(take, 0, rows.shape[0] - 1)
@@ -110,6 +122,22 @@ def bucket_coo(rows: jax.Array, cols: jax.Array, signs: jax.Array, m: int,
     s = jnp.where(valid, signs[take_c], 0)
     dropped = (starts[1:] - starts[:-1] - cap).clip(min=0).sum()
     return r.astype(jnp.int32), c.astype(jnp.int32), s, dropped
+
+
+def l2_per_block_cap(nnz_budget: float, block_m: int, K: int, cap: int) -> int:
+    """Per-M-block L2 bucket capacity: the global budget with 4× local-
+    imbalance headroom, clamped to the global cap.
+
+    Single source of truth for BOTH the real ``impl="pallas"`` lowering and
+    ``phi_l2_audit`` — and derived from the *requested* block_m, exactly as
+    the real path derives it (the bucketing itself may still use the
+    clamped ``effective_block_m``). When the audit derived its cap from the
+    effective block instead, any M < 256 problem audited against a smaller
+    capacity than the real path actually enforces, and the audit could
+    report ``bucket_dropped`` the real path doesn't have — violating its
+    docstring contract.
+    """
+    return max(8, min(cap, int(4 * nnz_budget * block_m * K)))
 
 
 def phi_l2_audit(a: jax.Array, patterns: jax.Array, *, nnz_budget: float = 0.08,
@@ -123,7 +151,7 @@ def phi_l2_audit(a: jax.Array, patterns: jax.Array, *, nnz_budget: float = 0.08,
     of ``bucket_coo``), and ``chunk_overflow`` (entries beyond the per-chunk
     cap of the "coo" path). All zero ⇔ the budgeted impls are exact for this
     input; a numerics mismatch with nonzero counters is a capacity problem,
-    not a kernel bug. The "fused" and "ref" impls are budget-free.
+    not a kernel bug. The "fused"/"fused_stream"/"ref" impls are budget-free.
     """
     from repro.core.assign import assign_patterns, pack_l2_coo_jit
 
@@ -133,7 +161,7 @@ def phi_l2_audit(a: jax.Array, patterns: jax.Array, *, nnz_budget: float = 0.08,
     cap = max(128, int(nnz_budget * M * K))
     rows, cols, signs, pack_over = pack_l2_coo_jit(residual, cap)
     bm = effective_block_m(M, block_m)
-    per_block = max(8, min(cap, int(4 * nnz_budget * bm * K)))
+    per_block = l2_per_block_cap(nnz_budget, block_m, K, cap)
     G = cdiv(M, bm)
     _, _, _, bucket_drop = bucket_coo(rows, cols, signs, G * bm, bm, per_block)
     # Mirror _phi_matmul_coo_chunked's capacity exactly (env-tunable chunk
@@ -224,12 +252,43 @@ def _fused_candidates(M: int, N: int) -> list[tuple[int, int]]:
     return [(bm, bn) for bm in bms or [128] for bn in bns]
 
 
-def fused_shape_viable(M: int, K: int, N: int, T: int, q: int) -> bool:
-    """Shape gate for the execution policy: False when even the smallest
-    fused block config busts the VMEM budget (the kernel holds the whole
-    (bm, K) activation block and (K, bn) weight stripe on-chip)."""
-    return min(_fused_vmem_bytes(bm, bn, K, T, q)
-               for bm, bn in _fused_candidates(M, N)) <= _VMEM_BUDGET_BYTES
+def _stream_vmem_bytes(bm: int, bn: int, K: int, T: int, q: int,
+                       gt: int) -> int:
+    """Per-program f32 working set of the K-streaming kernel: two buffer
+    slots of ``gt`` K-partitions (double buffering) plus the resident scale
+    vector and the out/L1/L2 accumulator blocks."""
+    k = K // T
+    return 4 * (2 * gt * (bm * k          # activation group slices
+                          + q * k         # pattern group
+                          + (q + 1) * bn  # PWP group stripe
+                          + k * bn)       # weight group stripe
+                + T * (q + 1)             # resident per-row scales
+                + 3 * bm * bn)            # out block + L1/L2 accumulators
+
+
+def _stream_candidates(M: int, N: int, T: int) -> list[tuple[int, int, int]]:
+    gts = [gt for gt in (8, 4, 2, 1) if T % gt == 0]    # gt=1 always divides
+    return [(bm, bn, gt) for bm, bn in _fused_candidates(M, N) for gt in gts]
+
+
+def fused_shape_viable(M: int, K: int, N: int, T: int, q: int) -> str:
+    """Three-way shape gate for the execution policy: which fused lowering
+    (if any) fits the VMEM budget for this shape.
+
+    Returns ``"fused"`` when some all-resident block config fits (the
+    kernel holds the whole (bm, K) activation block and (K, bn) weight
+    stripe on-chip), else ``"fused_stream"`` when some double-buffered
+    K-group config fits, else ``"coo"`` (pure-XLA fallback — in practice
+    only pathological pattern counts land here; K no longer matters since
+    streaming holds just ``group_t`` partitions resident).
+    """
+    if min(_fused_vmem_bytes(bm, bn, K, T, q)
+           for bm, bn in _fused_candidates(M, N)) <= _VMEM_BUDGET_BYTES:
+        return "fused"
+    if min(_stream_vmem_bytes(bm, bn, K, T, q, gt)
+           for bm, bn, gt in _stream_candidates(M, N, T)) <= _VMEM_BUDGET_BYTES:
+        return "fused_stream"
+    return "coo"
 
 
 def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
@@ -272,6 +331,78 @@ def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
     return best
 
 
+_STREAM_TUNE_CACHE: dict[tuple, tuple[int, int, int]] = {}
+
+
+def autotune_stream_blocks(M: int, K: int, N: int, q: int, T: int,
+                           measure: bool | None = None) -> tuple[int, int, int]:
+    """Pick (block_m, block_n, group_t) for the K-streaming fused kernel.
+
+    Same contract as ``autotune_fused_blocks`` plus the K-group axis: on
+    TPU (or ``PHI_AUTOTUNE=1``) candidates are timed once and cached; the
+    interpret-mode heuristic takes the largest blocks under the streaming
+    VMEM budget, then the deepest group (fewer DMA waits per program).
+    """
+    import os
+    key = (M, K, N, q, T)
+    if key in _STREAM_TUNE_CACHE:
+        return _STREAM_TUNE_CACHE[key]
+    cands = [c for c in _stream_candidates(M, N, T)
+             if _stream_vmem_bytes(c[0], c[1], K, T, q, c[2])
+             <= _VMEM_BUDGET_BYTES]
+    cands = cands or [min(_stream_candidates(M, N, T),
+                          key=lambda c: _stream_vmem_bytes(c[0], c[1], K, T,
+                                                           q, c[2]))]
+    if measure is None:
+        measure = (not _interpret()) or os.environ.get("PHI_AUTOTUNE") == "1"
+    if not measure or len(cands) == 1:
+        best = max(cands, key=lambda c: (c[0] * c[1], c[2], c[1]))
+    else:
+        import time
+        import numpy as _np
+        rng = _np.random.default_rng(0)
+        k = K // T
+        a = jnp.asarray((rng.random((max(c[0] for c in cands), K)) < 0.1),
+                        jnp.float32)
+        pats = jnp.asarray((rng.random((T, q, k)) < 0.5), jnp.float32)
+        pwp = jnp.asarray(rng.standard_normal((T, q + 1, N)), jnp.float32)
+        scale = jnp.ones((T, q + 1), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        timed = []
+        for bm, bn, gt in cands:
+            fn = lambda: phi_fused_stream_pallas(a[:bm], pats, pwp, scale, w,
+                                                 block_m=bm, block_n=bn,
+                                                 group_t=gt,
+                                                 interpret=_interpret())
+            jax.block_until_ready(fn())           # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            timed.append((time.perf_counter() - t0, (bm, bn, gt)))
+        best = min(timed)[1]
+    _STREAM_TUNE_CACHE[key] = best
+    return best
+
+
+def _fused_prologue(a2: jax.Array, pwp: jax.Array,
+                    pwp_scale: jax.Array | None, T: int, q: int, N: int,
+                    block_m: int, block_n: int):
+    """Shared prologue of the fused wrappers: clamp/pad the row blocks,
+    pick the N tiling, and default the PWP dequant scales. The bm·K bound
+    keeps the kernels' int32 ``l2_nnz`` audit counter exact (a block holds
+    at most bm·K residual entries — see ``_partition_body``)."""
+    M, K = a2.shape
+    bm = effective_block_m(M, block_m)
+    assert bm * K < 2 ** 31, (bm, K, "l2_nnz int32 audit counter would wrap")
+    a2 = _pad_rows(a2, bm)
+    bn = _pick_block_n(N, block_n)
+    if pwp_scale is None:
+        if pwp.dtype == jnp.int8:
+            raise ValueError("int8 pwp requires pwp_scale (from quantize_pwp); "
+                             "without it the L1 rows would be silently unscaled")
+        pwp_scale = jnp.ones((T, q + 1), jnp.float32)
+    return a2, bm, bn, pwp_scale
+
+
 def phi_fused(a: jax.Array, patterns: jax.Array, pwp: jax.Array, w: jax.Array,
               *, pwp_scale: jax.Array | None = None,
               block_m: int | None = None, block_n: int | None = None
@@ -296,16 +427,47 @@ def phi_fused(a: jax.Array, patterns: jax.Array, pwp: jax.Array, w: jax.Array,
     if block_m is None or block_n is None:
         tbm, tbn = autotune_fused_blocks(M, K, N, q, T)
         block_m, block_n = block_m or tbm, block_n or tbn
-    bm = effective_block_m(M, block_m)
-    a2 = _pad_rows(a2, bm)
-    bn = _pick_block_n(N, block_n)
-    if pwp_scale is None:
-        if pwp.dtype == jnp.int8:
-            raise ValueError("int8 pwp requires pwp_scale (from quantize_pwp); "
-                             "without it the L1 rows would be silently unscaled")
-        pwp_scale = jnp.ones((T, q + 1), jnp.float32)
+    a2, bm, bn, pwp_scale = _fused_prologue(a2, pwp, pwp_scale, T, q, N,
+                                            block_m, block_n)
     out, nnz = phi_fused_pallas(a2, patterns, pwp, pwp_scale, w,
                                 block_m=bm, block_n=bn, interpret=_interpret())
+    return out[:M, :N].reshape(*lead, N), nnz
+
+
+def phi_fused_stream(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
+                     w: jax.Array, *, pwp_scale: jax.Array | None = None,
+                     block_m: int | None = None, block_n: int | None = None,
+                     group_t: int | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """K-streaming fused Phi matmul — ``phi_fused`` for shapes whose
+    activation block / weight stripe / pattern bank bust the VMEM budget.
+
+    Same contract and return value as ``phi_fused`` (exact for any budget;
+    per-M-block int32 ``l2_nnz`` audit counter); only ``group_t``
+    K-partitions are resident per program, streamed with double-buffered
+    async copies on TPU (plain per-group slices under interpret).
+    """
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    T, q, k = patterns.shape
+    N = w.shape[-1]
+    a2 = a.reshape(-1, K)
+    M = a2.shape[0]
+    if block_m is None or block_n is None or group_t is None:
+        tbm, tbn, tgt = autotune_stream_blocks(M, K, N, q, T)
+        block_m, block_n = block_m or tbm, block_n or tbn
+        group_t = group_t or tgt
+    if T % group_t:
+        raise ValueError(
+            f"group_t={group_t} does not divide the partition count T={T}; "
+            "K-partition groups must tile the partition axis (pass a "
+            "divisor, or leave group_t=None to autotune)")
+    a2, bm, bn, pwp_scale = _fused_prologue(a2, pwp, pwp_scale, T, q, N,
+                                            block_m, block_n)
+    out, nnz = phi_fused_stream_pallas(a2, patterns, pwp, pwp_scale, w,
+                                       block_m=bm, block_n=bn,
+                                       group_t=group_t,
+                                       interpret=_interpret())
     return out[:M, :N].reshape(*lead, N), nnz
 
 
@@ -388,20 +550,25 @@ def phi_matmul(
     nnz_budget: float = 0.08,
     block_m: int | None = None,   # None: autotune (fused) / 256 (pallas)
     block_n: int | None = None,
+    group_t: int | None = None,   # fused_stream K-group depth (None: autotune)
     gather_dtype=None,
     pwp_scale=None,
 ) -> jax.Array:
     """Full Phi sparse matmul: a (..., K) binary × w (K, N) -> (..., N) f32.
 
     impl:
-      "fused"  — single-pass Pallas kernel (match + L1 + L2 fused in VMEM;
-                 index/residual never touch HBM; exact for any budget);
-      "pallas" — matcher/gather/spmm kernels (interpret mode off-TPU);
-      "coo"    — pure-XLA gather/scatter path (pjit-safe; used by dry-run);
-      "ref"    — dense L2 oracle (exactness baseline).
+      "fused"        — single-pass Pallas kernel (match + L1 + L2 fused in
+                       VMEM; index/residual never touch HBM; exact for any
+                       budget);
+      "fused_stream" — same fused pipeline, K-partition groups streamed
+                       HBM→VMEM (double-buffered async copies on TPU) so
+                       large-K shapes stay on the fused dataflow;
+      "pallas"       — matcher/gather/spmm kernels (interpret mode off-TPU);
+      "coo"          — pure-XLA gather/scatter path (pjit-safe; dry-run);
+      "ref"          — dense L2 oracle (exactness baseline).
     ``nnz_budget`` is the static L2 capacity as a fraction of M·K (paper
     measures ≈3% density; default leaves 2.6× headroom). It does not apply
-    to "fused"/"ref", which are budget-free.
+    to "fused"/"fused_stream"/"ref", which are budget-free.
     """
     lead = a.shape[:-1]
     K = a.shape[-1]
@@ -414,6 +581,12 @@ def phi_matmul(
     if impl == "fused":
         out, _ = phi_fused(a2, patterns, pwp, w, pwp_scale=pwp_scale,
                            block_m=block_m, block_n=block_n)
+        return out.reshape(*lead, N)
+
+    if impl == "fused_stream":
+        out, _ = phi_fused_stream(a2, patterns, pwp, w, pwp_scale=pwp_scale,
+                                  block_m=block_m, block_n=block_n,
+                                  group_t=group_t)
         return out.reshape(*lead, N)
 
     from repro.core.assign import assign_patterns, pack_l2_coo_jit
@@ -430,8 +603,9 @@ def phi_matmul(
     out1 = l1_gather(idx, pwp, block_m=block_m, block_n=block_n)
     cap = max(128, int(nnz_budget * M * K))
     rows, cols, signs, _ = pack_l2_coo_jit(residual, cap)
-    # Per-block capacity: same budget with 4× local-imbalance headroom.
-    per_block = max(8, min(cap, int(4 * nnz_budget * block_m * K)))
+    # Per-block capacity: same budget with 4× local-imbalance headroom
+    # (shared derivation with phi_l2_audit — see l2_per_block_cap).
+    per_block = l2_per_block_cap(nnz_budget, block_m, K, cap)
     out2 = l2_spmm(rows, cols, signs, w.astype(jnp.float32), M,
                    block_m=block_m, block_n=block_n, cap=per_block)
     return (out1 + out2).reshape(*lead, N)

@@ -36,6 +36,15 @@ HBM traffic vs the 3-kernel pipeline (modelled in
 (M, K)·1B residual write+read disappear, the activation block is fetched
 once per M-stripe instead of once per kernel, and the two partial (M, N)
 f32 outputs (write + read + final add) collapse into a single output write.
+
+Two variants share the per-partition body (``_partition_body``):
+
+  * ``phi_fused_pallas``        — all T K-partitions resident in VMEM;
+  * ``phi_fused_stream_pallas`` — only ``group_t`` partitions resident,
+    successive groups streamed HBM→VMEM with double-buffered
+    ``pltpu.make_async_copy`` (plain per-group slicing under interpret) —
+    keeps large-K layers on the fused dataflow instead of demoting them to
+    the pure-XLA "coo" path (the old ``fused_vmem_gate`` cliff).
 """
 from __future__ import annotations
 
@@ -46,10 +55,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _partition_body(at, p, pwp_t, scale_t, w_t, acc1, acc2, nnz, *, q: int):
+    """One K-partition of the fused pipeline: match → L1 → L2.
+
+    at (bm, k) f32 binary, p (q, k) f32, pwp_t (q+1, bn), scale_t (q+1,) f32,
+    w_t (k, bn). Shared by the all-resident kernel and the K-streaming
+    kernel so the two lowerings are the same math (and the same summation
+    association) by construction. ``nnz`` accumulates in int32 — an f32
+    accumulator is exact only below 2²⁴ residual entries per M-block, which
+    large bm·K kernels exceed and would silently round the packer-budget
+    telemetry.
+    """
+    # -- match (MXU): H = |a| + |p| − 2 a·pᵀ -------------------------------
+    dot = jnp.dot(at, p.T, preferred_element_type=jnp.float32)      # (bm, q)
+    pop_a = at.sum(-1)                                     # (bm,)
+    ham = pop_a[:, None] + p.sum(-1)[None, :] - 2.0 * dot
+    best = jnp.argmin(ham, axis=-1)                        # (bm,)
+    use = jnp.min(ham, axis=-1) < pop_a                    # strict rule
+    idx = jnp.where(use, best, q)                          # q == "none"
+    # -- L1 (MXU): one-hot retrieval straight from registers ---------------
+    onehot = (idx[:, None] == jax.lax.iota(jnp.int32, q + 1)[None, :]).astype(
+        jnp.float32)                                       # (bm, q+1)
+    rows = jnp.dot(onehot, pwp_t.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)     # (bm, bn)
+    row_scale = jnp.dot(onehot, scale_t[:, None],
+                        preferred_element_type=jnp.float32)  # (bm, 1)
+    acc1 = acc1 + rows * row_scale
+    # -- L2 (MXU): in-register residual, contraction against W tile --------
+    chosen = jnp.dot(onehot[:, :q], p, preferred_element_type=jnp.float32)
+    residual = at - chosen                                 # (bm, k) {−1,0,+1}
+    acc2 = acc2 + jnp.dot(residual, w_t.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    nnz = nnz + jnp.abs(residual).astype(jnp.int32).sum()
+    return acc1, acc2, nnz
+
+
 def _fused_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref, out_ref, nnz_ref,
                   *, q: int):
     T, _, k = p_ref.shape
-    q1 = q + 1
     a = a_ref[...].astype(jnp.float32)                     # (bm, K) binary
     # L1 and L2 accumulate separately and are added once at the end — the
     # same association the unfused lowerings use (out1 + out2). Since every
@@ -60,31 +103,12 @@ def _fused_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref, out_ref, nnz_ref,
     # VMEM, no extra HBM traffic.
     acc1 = jnp.zeros(out_ref.shape, jnp.float32)           # (bm, bn) L1
     acc2 = jnp.zeros(out_ref.shape, jnp.float32)           # (bm, bn) L2
-    nnz = jnp.zeros((), jnp.float32)
+    nnz = jnp.zeros((), jnp.int32)
     for t in range(T):                                     # static unroll
-        at = a[:, t * k:(t + 1) * k]                       # (bm, k)
-        p = p_ref[t].astype(jnp.float32)                   # (q, k)
-        # -- match (MXU): H = |a| + |p| − 2 a·pᵀ ---------------------------
-        dot = jnp.dot(at, p.T, preferred_element_type=jnp.float32)  # (bm, q)
-        pop_a = at.sum(-1)                                 # (bm,)
-        ham = pop_a[:, None] + p.sum(-1)[None, :] - 2.0 * dot
-        best = jnp.argmin(ham, axis=-1)                    # (bm,)
-        use = jnp.min(ham, axis=-1) < pop_a                # strict rule
-        idx = jnp.where(use, best, q)                      # q == "none"
-        # -- L1 (MXU): one-hot retrieval straight from registers -----------
-        onehot = (idx[:, None] == jax.lax.iota(jnp.int32, q1)[None, :]).astype(
-            jnp.float32)                                   # (bm, q+1)
-        rows = jnp.dot(onehot, pwp_ref[t].astype(jnp.float32),
-                       preferred_element_type=jnp.float32)  # (bm, bn)
-        row_scale = jnp.dot(onehot, scale_ref[t][:, None],
-                            preferred_element_type=jnp.float32)  # (bm, 1)
-        acc1 += rows * row_scale
-        # -- L2 (MXU): in-register residual, contraction against W tile ----
-        chosen = jnp.dot(onehot[:, :q], p, preferred_element_type=jnp.float32)
-        residual = at - chosen                             # (bm, k) {−1,0,+1}
-        acc2 += jnp.dot(residual, w_ref[t * k:(t + 1) * k, :].astype(jnp.float32),
-                        preferred_element_type=jnp.float32)
-        nnz += jnp.abs(residual).sum()
+        acc1, acc2, nnz = _partition_body(
+            a[:, t * k:(t + 1) * k], p_ref[t].astype(jnp.float32),
+            pwp_ref[t], scale_ref[t], w_ref[t * k:(t + 1) * k, :],
+            acc1, acc2, nnz, q=q)
     out_ref[...] = acc1 + acc2
     nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
 
@@ -158,4 +182,220 @@ def phi_fused_pallas(
         **kwargs,
     )(a.astype(jnp.float32), patterns.astype(jnp.float32), pwp,
       pwp_scale.astype(jnp.float32), w)
+    return out, nnz[:, 0]
+
+
+# ------------------------------------------------------- K-streaming kernel ---
+# For large K the all-resident kernel above cannot hold the (bm, K)
+# activation block, (K, bn) weight stripe, and T-partition pattern/PWP
+# tensors in VMEM at once — PR 2's policy demoted such shapes to the
+# pure-XLA "coo" path. The streaming variant keeps the same (M/bm, N/bn)
+# grid but holds only ``group_t`` K-partitions on-chip at a time, streaming
+# successive groups HBM→VMEM with double-buffered ``pltpu.make_async_copy``
+# DMAs (the next group's copy is in flight while the current group is
+# matched/contracted). Under ``interpret=True`` (CPU correctness runs) async
+# copies are meaningless — the interpreter has no VMEM or DMA engine — so
+# the same group loop runs with plain per-group ref slices instead.
+
+
+def _fused_stream_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref,
+                         out_ref, nnz_ref, *, q: int, group_t: int):
+    """Interpret-mode streaming body: per-group slicing stands in for DMA."""
+    T, _, k = p_ref.shape
+    gk = group_t * k
+    num_groups = T // group_t
+
+    def body(g, carry):
+        acc1, acc2, nnz = carry
+        # Plain per-group loads — the interpret-mode stand-in for the
+        # double-buffered async copies of the native path below.
+        a_g = a_ref[:, pl.ds(g * gk, gk)].astype(jnp.float32)
+        p_g = p_ref[pl.ds(g * group_t, group_t), :, :].astype(jnp.float32)
+        pwp_g = pwp_ref[pl.ds(g * group_t, group_t), :, :]
+        s_g = scale_ref[pl.ds(g * group_t, group_t), :]
+        w_g = w_ref[pl.ds(g * gk, gk), :]
+        for s in range(group_t):                           # static unroll
+            acc1, acc2, nnz = _partition_body(
+                a_g[:, s * k:(s + 1) * k], p_g[s], pwp_g[s], s_g[s],
+                w_g[s * k:(s + 1) * k, :], acc1, acc2, nnz, q=q)
+        return acc1, acc2, nnz
+
+    acc1, acc2, nnz = jax.lax.fori_loop(
+        0, num_groups, body,
+        (jnp.zeros(out_ref.shape, jnp.float32),
+         jnp.zeros(out_ref.shape, jnp.float32),
+         jnp.zeros((), jnp.int32)))
+    out_ref[...] = acc1 + acc2
+    nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
+
+
+def _fused_stream_kernel_dma(a_hbm, p_hbm, pwp_hbm, scale_ref, w_hbm,
+                             out_ref, nnz_ref,
+                             a_buf, p_buf, pwp_buf, w_buf, sem,
+                             *, q: int, group_t: int,
+                             block_m: int, block_n: int):
+    """Native TPU streaming body: double-buffered HBM→VMEM group copies.
+
+    a/p/pwp/w live in ``ANY`` (HBM) and are fetched one ``group_t``-partition
+    group at a time into (2, …) VMEM scratch; the copy for group g+1 is
+    started before the wait on group g so DMA overlaps the MXU work
+    (standard double-buffer pattern). scale (T, q+1) is tiny and stays
+    resident in VMEM via a normal BlockSpec.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    T, _, k = p_hbm.shape
+    gk = group_t * k
+    num_groups = T // group_t
+
+    def copies(g, slot):
+        # One async copy per streamed operand; sem is a (2, 4) DMA array.
+        return (
+            pltpu.make_async_copy(
+                a_hbm.at[pl.ds(i * block_m, block_m), pl.ds(g * gk, gk)],
+                a_buf.at[slot], sem.at[slot, 0]),
+            pltpu.make_async_copy(
+                p_hbm.at[pl.ds(g * group_t, group_t)], p_buf.at[slot],
+                sem.at[slot, 1]),
+            pltpu.make_async_copy(
+                pwp_hbm.at[pl.ds(g * group_t, group_t), :,
+                           pl.ds(j * block_n, block_n)],
+                pwp_buf.at[slot], sem.at[slot, 2]),
+            pltpu.make_async_copy(
+                w_hbm.at[pl.ds(g * gk, gk), pl.ds(j * block_n, block_n)],
+                w_buf.at[slot], sem.at[slot, 3]),
+        )
+
+    for c in copies(0, 0):                                 # warm-up group
+        c.start()
+
+    def body(g, carry):
+        acc1, acc2, nnz = carry
+        slot = jax.lax.rem(g, 2)
+
+        @pl.when(g + 1 < num_groups)
+        def _():
+            for c in copies(g + 1, 1 - slot):              # prefetch next
+                c.start()
+
+        for c in copies(g, slot):                          # drain current
+            c.wait()
+        a_g = a_buf[slot].astype(jnp.float32)              # (bm, gk)
+        p_g = p_buf[slot].astype(jnp.float32)              # (gt, q, k)
+        pwp_g = pwp_buf[slot]                              # (gt, q+1, bn)
+        s_g = scale_ref[...]                               # (T, q+1) resident
+        w_g = w_buf[slot]                                  # (gk, bn)
+        for s in range(group_t):                           # static unroll
+            acc1, acc2, nnz = _partition_body(
+                a_g[:, s * k:(s + 1) * k], p_g[s], pwp_g[s],
+                s_g[g * group_t + s], w_g[s * k:(s + 1) * k, :],
+                acc1, acc2, nnz, q=q)
+        return acc1, acc2, nnz
+
+    acc1, acc2, nnz = jax.lax.fori_loop(
+        0, num_groups, body,
+        (jnp.zeros(out_ref.shape, jnp.float32),
+         jnp.zeros(out_ref.shape, jnp.float32),
+         jnp.zeros((), jnp.int32)))
+    out_ref[...] = acc1 + acc2
+    nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "group_t",
+                                             "interpret"))
+def phi_fused_stream_pallas(
+    a: jax.Array,
+    patterns: jax.Array,
+    pwp: jax.Array,
+    pwp_scale: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    group_t: int = 4,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """K-streaming fused Phi matmul: same contract as ``phi_fused_pallas``
+    (and the same per-partition math via ``_partition_body``), but only
+    ``group_t`` K-partitions are resident per program, so shapes whose
+    (bm, K) activation block or (K, bn) weight stripe bust VMEM still run
+    fused instead of falling back to the XLA "coo" path.
+
+    Returns (out (M, N) f32, l2_nnz (M // block_m,) int32). group_t must
+    divide T.
+    """
+    M, K = a.shape
+    T, q, k = patterns.shape
+    N = w.shape[-1]
+    assert K == T * k and M % block_m == 0 and N % block_n == 0, (
+        a.shape, patterns.shape, w.shape, block_m, block_n)
+    assert T % group_t == 0, (T, group_t)
+    assert pwp.shape == (T, q + 1, N) and pwp_scale.shape == (T, q + 1)
+    grid = (M // block_m, N // block_n)
+    out_specs = [
+        pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((M, N), jnp.float32),
+        jax.ShapeDtypeStruct((M // block_m, 1), jnp.int32),
+    ]
+    args = (a.astype(jnp.float32), patterns.astype(jnp.float32), pwp,
+            pwp_scale.astype(jnp.float32), w)
+    if interpret:
+        kernel = functools.partial(_fused_stream_kernel, q=q, group_t=group_t)
+        out, nnz = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, K), lambda i, j: (i, 0)),
+                pl.BlockSpec((T, q, k), lambda i, j: (0, 0, 0)),
+                pl.BlockSpec((T, q + 1, block_n), lambda i, j: (0, 0, j)),
+                pl.BlockSpec((T, q + 1), lambda i, j: (0, 0)),
+                pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=True,
+        )(*args)
+        return out, nnz[:, 0]
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(_fused_stream_kernel_dma, q=q, group_t=group_t,
+                               block_m=block_m, block_n=block_n)
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    gk = group_t * k
+    kwargs: dict = {}
+    semantics = ("parallel", "parallel")    # disjoint out blocks (see fused)
+    try:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=semantics)
+    except (AttributeError, TypeError):
+        kwargs["compiler_params"] = dict(
+            mosaic=dict(dimension_semantics=semantics))
+    out, nnz = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            any_spec,                                        # a     (HBM)
+            any_spec,                                        # p     (HBM)
+            any_spec,                                        # pwp   (HBM)
+            pl.BlockSpec((T, q + 1), lambda i, j: (0, 0)),   # scale (VMEM)
+            any_spec,                                        # w     (HBM)
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((2, block_m, gk), jnp.float32),       # a groups
+            pltpu.VMEM((2, group_t, q, k), jnp.float32),     # pattern groups
+            pltpu.VMEM((2, group_t, q + 1, block_n), pwp.dtype),
+            pltpu.VMEM((2, gk, block_n), w.dtype),
+            pltpu.SemaphoreType.DMA((2, 4)),
+        ],
+        interpret=False,
+        **kwargs,
+    )(*args)
     return out, nnz[:, 0]

@@ -114,12 +114,49 @@ def test_autodiff_and_vmap_resolve_coo(small_phi):
     assert ("t.vmap", "coo", "autodiff_or_vmap") in dec
 
 
-def test_vmem_shape_gate_falls_back_to_coo():
+def test_vmap_over_patterns_only_resolves_coo(small_phi):
+    """A vmap that batches ONLY the pattern bank (per-layer pattern sets)
+    must be sniffed too: a/w/pwp are plain arrays, so only the ``patterns``
+    operand carries the BatchTracer — dispatching to a Pallas impl there
+    would fail to compile (no batching rule)."""
+    a, w, pats, pwp = small_phi
     pol = dispatch.get_policy()
-    # K so large that even the smallest block config busts the VMEM budget.
-    assert not ops.fused_shape_viable(256, 1 << 16, 512, 1 << 12, 128)
+    vout = jax.vmap(lambda p_: dispatch.phi_matmul(a, w, p_, pwp,
+                                                   site="t.vmap_pats"))(
+        jnp.stack([pats, pats]))
+    ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
+    for i in range(2):
+        np.testing.assert_allclose(np.asarray(vout[i]), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-3)
+    assert ("t.vmap_pats", "coo", "autodiff_or_vmap") in pol.decisions()
+
+
+def test_vmem_shape_gate_resolves_fused_stream():
+    """The VMEM gate is three-way: shapes whose all-resident blocks bust
+    the budget stream their K axis (fused dataflow kept) instead of
+    falling off to the pure-XLA "coo" path."""
+    pol = dispatch.get_policy()
+    # K so large that even the smallest all-resident config busts VMEM —
+    # the shape class PR 2 demoted to "coo".
+    assert ops.fused_shape_viable(256, 1 << 16, 512, 1 << 12, 128) == \
+        "fused_stream"
     d = pol.resolve(site="t.vmem", m=256, k_dim=1 << 16, n=512,
                     t=1 << 12, q=128)
+    assert d.impl == "fused_stream" and d.reason.startswith(
+        "vmem_gate_k_stream")
+    # blocks carry the K-group size: (block_m, block_n, group_t)
+    assert d.blocks is not None and len(d.blocks) == 3
+    bm, bn, gt = d.blocks
+    assert (1 << 12) % gt == 0 and gt >= 1
+
+
+def test_vmem_shape_gate_coo_only_when_streaming_busts_too():
+    pol = dispatch.get_policy()
+    # Pathological pattern count: even a single-partition group's PWP
+    # stripe busts VMEM, so no fused lowering fits.
+    assert ops.fused_shape_viable(256, 256, 512, 16, 1 << 16) == "coo"
+    d = pol.resolve(site="t.vmem_coo", m=256, k_dim=256, n=512, t=16,
+                    q=1 << 16)
     assert d.impl == "coo" and d.reason == "fused_vmem_gate"
 
 
@@ -159,10 +196,23 @@ def test_overrides_honored_and_demoted_in_spmd(small_phi):
         d = pol.resolve(site="t.addem", m=96, k_dim=64, n=128, t=4, q=16,
                         override="fused")
         assert d.impl == "coo" and d.reason == "autodiff_demotes_fused"
-    # ... and where the fused VMEM gate fails
+    # ... a "fused" override where only streaming fits is streamed, not
+    # demoted to coo (closest executable lowering to the operator's intent)
     d = pol.resolve(site="t.vmdem", m=256, k_dim=1 << 16, n=512, t=1 << 12,
                     q=128, override="fused")
+    assert d.impl == "fused_stream" and d.reason == "vmem_gate_streams_fused"
+    assert d.blocks is not None and len(d.blocks) == 3
+    # ... a "fused_stream" override is honored wherever it can execute
+    d = pol.resolve(site="t.sov", m=96, k_dim=64, n=128, t=4, q=16,
+                    override="fused_stream")
+    assert d.impl == "fused_stream" and d.reason == "call_override"
+    # ... and where even streaming busts VMEM, both fused overrides demote
+    d = pol.resolve(site="t.vmdem2", m=256, k_dim=256, n=512, t=16,
+                    q=1 << 16, override="fused")
     assert d.impl == "coo" and d.reason == "vmem_gate_demotes_fused"
+    d = pol.resolve(site="t.vmdem3", m=256, k_dim=256, n=512, t=16,
+                    q=1 << 16, override="fused_stream")
+    assert d.impl == "coo" and d.reason == "vmem_gate_demotes_fused_stream"
     with pytest.raises(ValueError, match="unknown Phi impl"):
         pol.resolve(site="t.bad", m=96, k_dim=64, n=128, t=4, q=16,
                     override="nope")
@@ -350,3 +400,46 @@ def test_phi_lm_decode_bit_identical_coo_vs_policy():
     jax.effects_barrier()
     budgets = {b.site for b in pol.report()["packer_budgets"]}
     assert budgets & fused_sites
+
+
+# -------------------------------- acceptance: large-K streaming parity ------
+def test_large_k_stream_bit_identical_vs_coo(monkeypatch):
+    """Acceptance: a large-K shape that PR 2's policy demoted to ``coo``
+    (K=16384, N=512 — ``fused_shape_viable`` was False) now resolves to
+    ``fused_stream``, its output is BIT-identical to forced-``coo`` under
+    dyadic-grid weights (same exactness argument as the decode-parity
+    test: every Phi partial product is exactly representable, so summation
+    order is irrelevant), and its modelled HBM bytes are ≤ the 3-kernel
+    pipeline's for the same shape."""
+    monkeypatch.setenv("PHI_CHUNK_ROWS", "64")  # keep the coo run small
+    from repro.core.patterns import PhiConfig, calibrate, \
+        pattern_weight_products
+
+    rng = np.random.default_rng(7)
+    M, K, N, q = 48, 16384, 512, 8
+    T = K // 16
+    a = jnp.asarray((rng.random((M, K)) < 0.08), jnp.float32)
+    w = jnp.asarray(np.round(rng.standard_normal((K, N)) * 1024) / 1024,
+                    jnp.float32)                 # dyadic 2^-10 grid
+    pats = jnp.asarray(calibrate(np.asarray(a), PhiConfig(k=16, q=q,
+                                                          iters=3)))
+    pwp = pattern_weight_products(pats, w)       # sums of dyadics: exact
+
+    assert ops.fused_shape_viable(M, K, N, T, q) == "fused_stream"
+    pol = dispatch.get_policy()
+    out_pol = pol.matmul(a, w, pats, pwp, site="t.largeK")
+    out_coo = ops.phi_matmul(a, w, pats, pwp, impl="coo")
+    assert np.array_equal(np.asarray(out_pol), np.asarray(out_coo)), \
+        f"differ by {np.abs(np.asarray(out_pol) - np.asarray(out_coo)).max()}"
+    dec = pol.decisions()
+    assert any(s == "t.largeK" and i == "fused_stream"
+               and r.startswith("vmem_gate_k_stream") for (s, i, r) in dec)
+    # runtime telemetry carries the K-group size alongside the nnz counters
+    jax.effects_barrier()
+    with pol._lock:
+        site = dict(pol._sites)["t.largeK"]
+    assert site["group_t"] >= 1 and site["l2_nnz_total"] > 0
+    # modelled HBM bytes: streaming keeps the fused round-trip savings
+    from repro.core.perfmodel import GemmShape, phi_kernel_traffic
+    tr = phi_kernel_traffic(GemmShape(M, K, N), k=16, q=q)
+    assert tr["fused_stream"].total <= tr["three_kernel"].total

@@ -73,6 +73,71 @@ def test_bucket_coo_overflow_reported():
     assert int(dropped) == 12
 
 
+def test_bucket_coo_sentinels_not_counted_dropped():
+    """Sentinel padding (row == true M, sign == 0) must not consume bucket
+    capacity or be counted dropped when the caller's m = G·bm exceeds the
+    true M (M not a multiple of the effective block): the sentinels then
+    land *inside* the last block's searchsorted span."""
+    r = np.zeros((10, 8), np.int8)              # 3 real entries, M=10
+    r[0, 0] = 1
+    r[5, 3] = -1
+    r[9, 1] = 1
+    rows, cols, signs, over = pack_l2_coo_jit(jnp.asarray(r), 32)
+    assert int(over) == 0                       # 29 sentinel slots
+    # G=2 blocks of bm=8 -> G*bm=16 > M=10: sentinels sit in block 1's span.
+    br, bc, bs, dropped = ops.bucket_coo(rows, cols, signs, 16, 8, cap=4)
+    assert int(dropped) == 0                    # was 26 before the fix
+    # ... and the bucketed product is still exact
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((8, 128)),
+                    jnp.float32)
+    out = ops.l2_spmm(rows, cols, signs, w, 10, block_m=8, cap=4)
+    want = ref.l2_dense_ref(jnp.asarray(r), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_phi_l2_audit_zero_counters_non_block_multiple_m():
+    """Acceptance (sentinel false-drop repro): on a non-block-multiple-M
+    input whose budgeted paths drop nothing, every audit counter is zero.
+    Before the fix the COO sentinels landed inside the last block's span
+    and phi_l2_audit reported a capacity overflow that never happened."""
+    rng = np.random.default_rng(0)
+    a = structured_binary(rng, 300, 64)         # M=300: 300 % 8 != 0
+    pats = calibrate(a, PhiConfig(k=16, q=16, iters=6))
+    aud = ops.phi_l2_audit(jnp.asarray(a), jnp.asarray(pats),
+                           nnz_budget=0.08, block_m=8)
+    # the budgeted paths have ample headroom for this input ...
+    assert 0 < aud["l2_nnz"] < aud["cap"]
+    # ... so nothing may be reported dropped anywhere
+    assert aud["pack_overflow"] == 0
+    assert aud["bucket_dropped"] == 0
+    assert aud["chunk_overflow"] == 0
+
+
+def test_phi_l2_audit_matches_real_path_cap_for_small_m():
+    """The audit and the real ``impl="pallas"`` path must derive the
+    per-block cap from the same (requested) block_m: for M < 256 the
+    effective block is smaller, and deriving from it under-reports the
+    capacity the real path actually enforces (false bucket_dropped)."""
+    rng = np.random.default_rng(3)
+    a = (rng.random((20, 32)) < 0.3).astype(np.float32)
+    pats = calibrate(a, PhiConfig(k=16, q=8, iters=4))
+    aud = ops.phi_l2_audit(jnp.asarray(a), jnp.asarray(pats), nnz_budget=0.01)
+    cap = aud["cap"]                            # the max(128, ...) floor
+    # effective-bm derivation would cap below the observed nnz ...
+    bm_eff = ops.effective_block_m(20, 256)
+    assert ops.l2_per_block_cap(0.01, bm_eff, 32, cap) < aud["l2_nnz"] <= cap
+    # ... but the real path's requested-bm cap covers it: no false drops.
+    assert aud["bucket_dropped"] == 0
+    # and the real budgeted path is indeed exact at this budget
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    from repro.core.patterns import pattern_weight_products
+    pwp = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w))
+    out = ops.phi_matmul(jnp.asarray(a), jnp.asarray(w), jnp.asarray(pats),
+                         pwp, impl="pallas", nnz_budget=0.01)
+    np.testing.assert_allclose(np.asarray(out), a @ w, rtol=1e-4, atol=1e-3)
+
+
 @pytest.mark.parametrize("reset", ["hard", "soft"])
 @pytest.mark.parametrize("shape", [(32, 128), (3, 50, 70), (1000,)])
 def test_lif_kernel(reset, shape):
@@ -85,7 +150,8 @@ def test_lif_kernel(reset, shape):
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=1e-6)
 
 
-@pytest.mark.parametrize("impl", ["ref", "coo", "pallas", "fused"])
+@pytest.mark.parametrize("impl", ["ref", "coo", "pallas", "fused",
+                                  "fused_stream"])
 @pytest.mark.parametrize("shape", [(128, 64, 96), (200, 32, 128), (64, 128, 256)])
 def test_phi_matmul_exact(impl, shape):
     """Phi without PAFT is lossless (paper Sec. 5.4.2): decomposition == dense."""

@@ -153,6 +153,88 @@ def _check_lossless(a):
     np.testing.assert_allclose(np.asarray(out), a @ w, rtol=1e-4, atol=1e-3)
 
 
+# ------------------------------------------------- K-streaming variant ------
+# Same fused pipeline, but only group_t K-partitions resident per program
+# (double-buffered HBM→VMEM copies on TPU; per-group slices in interpret
+# mode). Shares _partition_body with the all-resident kernel, so the two
+# must agree BITWISE on any shape both can run.
+
+
+@pytest.mark.parametrize("shape", [(128, 64, 96), (200, 32, 128),
+                                   (300, 64, 384), (513, 48, 128)])
+def test_stream_matches_fused_bitwise_and_dense(shape):
+    m, K, n = shape
+    a, w, pats, pwp = _setup(m, K, n)
+    args = (jnp.asarray(a), jnp.asarray(pats), pwp, jnp.asarray(w))
+    out_s, nnz_s = ops.phi_fused_stream(*args)
+    out_f, nnz_f = ops.phi_fused(*args)
+    np.testing.assert_allclose(np.asarray(out_s), a @ w, rtol=1e-4, atol=1e-3)
+    # identical math + identical association (shared _partition_body, L1/L2
+    # accumulated separately, added once) -> bitwise agreement
+    assert np.array_equal(np.asarray(out_s), np.asarray(out_f))
+    assert int(np.asarray(nnz_s).sum()) == int(np.asarray(nnz_f).sum())
+
+
+@pytest.mark.parametrize("group_t", [1, 2, 4])
+def test_stream_group_sizes_agree(group_t):
+    m, K, n = 200, 64, 128
+    a, w, pats, pwp = _setup(m, K, n)
+    out, nnz = ops.phi_fused_stream(jnp.asarray(a), jnp.asarray(pats), pwp,
+                                    jnp.asarray(w), group_t=group_t)
+    np.testing.assert_allclose(np.asarray(out), a @ w, rtol=1e-4, atol=1e-3)
+
+
+def test_stream_rejects_non_divisor_group():
+    """An explicit group_t that doesn't tile the partition axis raises
+    (silently adjusting it would mislabel A/B group-depth measurements)."""
+    m, K, n = 64, 48, 128                      # T = 3 partitions
+    a, w, pats, pwp = _setup(m, K, n)
+    with pytest.raises(ValueError, match="does not divide"):
+        ops.phi_fused_stream(jnp.asarray(a), jnp.asarray(pats), pwp,
+                             jnp.asarray(w), group_t=2)
+
+
+def test_stream_int8_pwp_dequant_in_kernel():
+    m, K, n = 256, 64, 128
+    a, w, pats, pwp = _setup(m, K, n)
+    q8, scale = quantize_pwp(pwp)
+    out = ops.phi_matmul(jnp.asarray(a), jnp.asarray(w), jnp.asarray(pats),
+                         q8, impl="fused_stream", pwp_scale=scale)
+    deq = q8.astype(jnp.float32) * scale[..., None]
+    want = ops.phi_matmul(jnp.asarray(a), jnp.asarray(w), jnp.asarray(pats),
+                          deq, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_nnz_counters_are_int32_and_exact():
+    """The audit counter accumulates in int32 (an f32 accumulator is exact
+    only below 2²⁴ entries per M-block) and matches the true residual count
+    for both fused variants."""
+    m, K, n = 300, 64, 128
+    a, w, pats, pwp = _setup(m, K, n)
+    from repro.core.assign import assign_patterns
+    _, residual = assign_patterns(jnp.asarray(a), jnp.asarray(pats))
+    want = int(jnp.abs(residual).sum())
+    for fn in (ops.phi_fused, ops.phi_fused_stream):
+        _, nnz = fn(jnp.asarray(a), jnp.asarray(pats), pwp, jnp.asarray(w))
+        assert np.asarray(nnz).dtype == np.int32
+        assert int(np.asarray(nnz).sum()) == want
+
+
+def test_stream_autotuner_respects_vmem_and_caches():
+    from repro.kernels.ops import _stream_vmem_bytes, autotune_stream_blocks
+    ops._STREAM_TUNE_CACHE.clear()
+    M, K, N, q, T = 256, 1 << 16, 512, 128, 1 << 12
+    bm, bn, gt = autotune_stream_blocks(M, K, N, q, T)
+    assert T % gt == 0
+    assert _stream_vmem_bytes(bm, bn, K, T, q, gt) <= ops._VMEM_BUDGET_BYTES
+    assert (M, K, N, q, T) in ops._STREAM_TUNE_CACHE
+    assert autotune_stream_blocks(M, K, N, q, T) == (bm, bn, gt)
+    # the all-resident tuner would have no in-budget candidate here
+    assert ops.fused_shape_viable(M, K, N, T, q) == "fused_stream"
+
+
 def test_autotuner_respects_vmem_and_caches():
     from repro.kernels.ops import _fused_vmem_bytes, autotune_fused_blocks
     ops._FUSED_TUNE_CACHE.clear()
@@ -189,3 +271,25 @@ def test_fused_traffic_model_eliminates_roundtrips():
     tr8 = phi_kernel_traffic(GemmShape(2048, 256, 512), k=16, q=128,
                              pwp_bytes_per_el=1)
     assert tr8["three_kernel"].total / tr8["fused"].total >= 1.3
+
+
+def test_stream_traffic_model_keeps_roundtrip_savings():
+    """The K-streaming kernel keeps every round-trip elimination of the
+    all-resident kernel; its only extra cost is re-streaming activations/
+    patterns per N-block (zero at gn == 1, the large-K layer geometry)."""
+    from repro.core.perfmodel import GemmShape, phi_kernel_traffic
+    # Large-K layer shape: one N-block -> stream bytes == fused bytes + the
+    # per-(i, j) pattern re-fetches; still strictly below the 3-kernel total.
+    tr = phi_kernel_traffic(GemmShape(256, 16384, 512), k=16, q=128,
+                            block_n=512)
+    three, stream = tr["three_kernel"], tr["fused_stream"]
+    assert stream.idx_bytes == 0 and stream.residual_bytes == 0
+    assert stream.coo_bytes == 0
+    assert stream.a_bytes == tr["fused"].a_bytes          # gn == 1
+    assert stream.total <= three.total
+    # Multi-N-block geometry pays the re-stream cost on a and patterns only.
+    tr2 = phi_kernel_traffic(GemmShape(2048, 256, 512), k=16, q=128,
+                             block_n=128)
+    assert tr2["fused_stream"].a_bytes == 4 * tr2["fused"].a_bytes  # gn == 4
+    assert tr2["fused_stream"].w_bytes == tr2["fused"].w_bytes
+    assert tr2["fused_stream"].pwp_bytes == tr2["fused"].pwp_bytes
