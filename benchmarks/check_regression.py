@@ -1,0 +1,155 @@
+"""CI bench-regression gate over BENCH_kernels.json.
+
+Compares a freshly generated bench file against the committed baseline
+(``benchmarks/baseline/BENCH_kernels.json``) on the *deterministic* columns
+only — the ones that are pure functions of the code, not of runner load:
+
+  * ``schema`` / ``backend``           — must match exactly (a schema bump is
+    an intentional change: update the baseline in the same PR);
+  * ``hbm_model_bytes``                — the modelled HBM traffic of every
+    lowering/shape. Byte counts may not grow past ``--rtol``; advantage
+    ratios (keys named ``ratio``) may not shrink past it. Improvements pass
+    (and should be committed as a new baseline so they become the floor);
+  * ``dispatch_decisions``             — the execution policy's resolved impl
+    per site. Any change (site gone, site new, different impl) fails: a
+    silently flipped dispatch decision is exactly the regression class this
+    gate exists for.
+
+Wall-time columns (``us_per_call``/``per_impl_us``) are deliberately
+ignored — they are noise on shared CI runners; the HBM model is the
+cross-backend perf claim this repo makes (see docs/kernels.md).
+
+Exit status: 0 = no regression, 1 = regression (details on stdout),
+2 = bad invocation / unreadable input. ``--update`` rewrites the baseline
+from the current file instead of comparing (for intentional changes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline", "BENCH_kernels.json")
+# Columns where LARGER is better — exactly the "ratio" advantage column
+# (baseline_total / our_total). Matched by full name, NOT suffix: the skew
+# section's "pwp_ratio" (fraction of the PWP bank streamed) and "pwp_usage"
+# are smaller-is-better and must fail on growth like the byte counts.
+_HIGHER_BETTER = ("ratio",)
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_regression: cannot read {path}: {e}")
+        sys.exit(2)
+
+
+def _decisions(payload: dict) -> dict[str, tuple[str, ...]]:
+    """site -> sorted tuple of resolved impls (reason strings are wording,
+    the impl is the decision)."""
+    by_site: dict[str, set] = {}
+    for d in payload.get("dispatch_decisions", []):
+        by_site.setdefault(d["site"], set()).add(d["impl"])
+    return {s: tuple(sorted(v)) for s, v in by_site.items()}
+
+
+def compare(baseline: dict, current: dict, rtol: float) -> list[str]:
+    """Returns a list of human-readable regression descriptions (empty =
+    pass)."""
+    errs: list[str] = []
+    for key in ("schema", "backend"):
+        if baseline.get(key) != current.get(key):
+            errs.append(f"{key}: baseline {baseline.get(key)!r} != "
+                        f"current {current.get(key)!r} (intentional? "
+                        f"regenerate the baseline in this PR)")
+
+    base_hbm = baseline.get("hbm_model_bytes", {})
+    cur_hbm = current.get("hbm_model_bytes", {})
+    for tag, base_cols in sorted(base_hbm.items()):
+        cur_cols = cur_hbm.get(tag)
+        if cur_cols is None:
+            errs.append(f"hbm_model_bytes[{tag}]: missing from current run")
+            continue
+        for col, base_v in sorted(base_cols.items()):
+            if not isinstance(base_v, (int, float)):
+                continue
+            cur_v = cur_cols.get(col)
+            if not isinstance(cur_v, (int, float)):
+                errs.append(f"hbm_model_bytes[{tag}][{col}]: missing/non-"
+                            f"numeric in current run")
+                continue
+            if col in _HIGHER_BETTER:
+                if cur_v < base_v * (1.0 - rtol):
+                    errs.append(
+                        f"hbm_model_bytes[{tag}][{col}]: advantage ratio "
+                        f"shrank {base_v:.4g} -> {cur_v:.4g}")
+            elif cur_v > base_v * (1.0 + rtol):
+                errs.append(
+                    f"hbm_model_bytes[{tag}][{col}]: modelled bytes grew "
+                    f"{base_v:.4g} -> {cur_v:.4g}")
+    for tag in sorted(set(cur_hbm) - set(base_hbm)):
+        errs.append(f"hbm_model_bytes[{tag}]: new in current run — "
+                    f"regenerate the baseline to cover it")
+
+    base_dec = _decisions(baseline)
+    cur_dec = _decisions(current)
+    for site, impls in sorted(base_dec.items()):
+        got = cur_dec.get(site)
+        if got is None:
+            errs.append(f"dispatch[{site}]: site disappeared "
+                        f"(baseline resolved {impls})")
+        elif got != impls:
+            errs.append(f"dispatch[{site}]: resolved impl changed "
+                        f"{impls} -> {got}")
+    for site in sorted(set(cur_dec) - set(base_dec)):
+        errs.append(f"dispatch[{site}]: new site — regenerate the baseline "
+                    f"to cover it")
+    return errs
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON (default: "
+                         "benchmarks/baseline/BENCH_kernels.json)")
+    ap.add_argument("--current", default="BENCH_kernels.json",
+                    help="freshly generated bench JSON to check")
+    ap.add_argument("--rtol", type=float, default=0.01,
+                    help="relative tolerance on modelled-byte columns")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from --current instead of "
+                         "comparing (intentional perf-model changes)")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        _load(args.current)  # validate it parses before replacing anything
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated from {args.current}")
+        return 0
+
+    baseline = _load(args.baseline)
+    current = _load(args.current)
+    errs = compare(baseline, current, args.rtol)
+    if errs:
+        print(f"bench regression vs {args.baseline} "
+              f"({len(errs)} finding(s)):")
+        for e in errs:
+            print(f"  REGRESSION: {e}")
+        print("if intentional, regenerate with: "
+              "python benchmarks/kernels_bench.py --json && "
+              "python benchmarks/check_regression.py --update")
+        return 1
+    n_cols = sum(len(v) for v in baseline.get("hbm_model_bytes", {}).values())
+    print(f"bench regression gate: OK ({n_cols} modelled-byte columns, "
+          f"{len(_decisions(baseline))} dispatch sites)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

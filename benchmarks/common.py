@@ -6,7 +6,6 @@ import os
 import pickle
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

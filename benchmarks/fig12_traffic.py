@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks import common
 from repro.core.assign import assign_patterns, phi_stats
 from repro.core.patterns import PhiConfig, calibrate
 import jax.numpy as jnp

@@ -4,10 +4,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks import common
 from repro.core.assign import phi_stats
 from repro.core.patterns import PhiConfig, calibrate
-from repro.core.perfmodel import DRAM_BPC, GemmShape, phi_layer, summarize
+from repro.core.perfmodel import DRAM_BPC, GemmShape, phi_layer
 
 
 def _acts(seed: int = 0, m: int = 4096, K: int = 288):

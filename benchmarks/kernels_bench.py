@@ -24,7 +24,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.assign import assign_patterns, pack_l2_coo_jit
-from repro.core.patterns import PhiConfig, calibrate, pattern_weight_products
+from repro.core.patterns import (
+    PhiConfig,
+    active_pattern_sets,
+    calibrate,
+    pattern_usage,
+    pattern_weight_products,
+)
 from repro.kernels import dispatch, ops, ref
 
 
@@ -182,13 +188,65 @@ def main(json_path: str | None = None) -> list[str]:
         rec(f"hbm_bytes_largeK_stream_{tag}", bs.total,
             f"{b3.total / bs.total:.2f}x_less_traffic_than_3kernel")
 
+    # ---- pattern-usage skew: the PWP-prefetching kernel -------------------
+    # Zipf-distributed pattern references (p ∝ 1/rank², the skew class the
+    # paper's 27.73% PWP-usage measurement comes from): the calibration
+    # histogram shows a small hot set, the policy resolves fused_prefetch,
+    # and only the referenced fraction of the PWP bank is streamed.
+    qz = 128
+    Mz, Kz, Nz = (2048 if on_tpu else 256), 64, 256
+    zprob = 1.0 / (np.arange(qz) + 1.0) ** 2
+    zprob /= zprob.sum()
+    zprotos = (rng.random((qz, Kz)) < 0.25).astype(np.float32)
+    az = np.abs(zprotos[rng.choice(qz, Mz, p=zprob)]
+                - (rng.random((Mz, Kz)) < 0.02)).astype(np.float32)
+    az = jnp.asarray(az, jnp.float32)
+    wz = jnp.asarray(rng.standard_normal((Kz, Nz)), jnp.float32)
+    patsz = jnp.asarray(calibrate(np.asarray(az),
+                                  PhiConfig(k=16, q=qz, iters=6)))
+    pwpz = pattern_weight_products(patsz, wz)
+    usage = pattern_usage(np.asarray(az), np.asarray(patsz))
+    active, usage_frac = active_pattern_sets(usage)
+    p_active = 0 if active is None else int(active.shape[-1])
+    dz = pol.resolve(site="bench.skew_policy", m=Mz, k_dim=Kz, n=Nz,
+                     t=patsz.shape[0], q=qz, usage=usage)
+    rec("policy_pick_skew", 0.0, f"impl={dz.impl}_reason={dz.reason}",
+        impl=dz.impl, reason=dz.reason, shape=[Mz, Kz, Nz],
+        usage_ratio=round(usage_frac, 4), p_active=p_active)
+    t_pref = _time(lambda: dispatch.phi_matmul(
+        az, wz, patsz, pwpz, site="bench.prefetch",
+        override="fused_prefetch", usage=usage), reps=reps)
+    rec("skew_fused_prefetch_" + mode, t_pref, "1.00x",
+        impl="fused_prefetch", shape=[Mz, Kz, Nz])
+    t_fused_z = _time(lambda: dispatch.phi_matmul(
+        az, wz, patsz, pwpz, site="bench.skew_fused", override="fused"),
+        reps=reps)
+    rec("skew_fused_" + mode, t_fused_z,
+        f"{t_fused_z / t_pref:.2f}x_of_fused_prefetch", impl="fused",
+        shape=[Mz, Kz, Nz])
+    for tag, pwp_b in (("f32pwp", 4), ("int8pwp", 1)):
+        trz = phi_kernel_traffic(GemmShape(Mz, Kz, Nz), k=16, q=qz,
+                                 pwp_bytes_per_el=pwp_b,
+                                 pwp_usage=usage_frac)
+        bf, bp = trz["fused"], trz["fused_prefetch"]
+        traffic[f"skew_{tag}"] = {
+            "fused": bf.total, "fused_prefetch": bp.total,
+            "pwp_usage": usage_frac,
+            "pwp_ratio": bp.pwp_bytes / bf.pwp_bytes,
+            "ratio": bf.total / bp.total}
+        rec(f"hbm_bytes_skew_prefetch_{tag}", bp.total,
+            f"pwp_stream_x{bp.pwp_bytes / bf.pwp_bytes:.2f}_of_fused")
+
     if json_path:
         jax.effects_barrier()   # flush policy telemetry callbacks
         payload = {
-            "schema": 2,
+            "schema": 3,
             "backend": jax.default_backend(),
             "shape": {"m": M, "k": K, "n": N, "bench_m": bench_m},
             "large_k_shape": {"m": Ml, "k": Kl, "n": Nl},
+            "skew_shape": {"m": Mz, "k": Kz, "n": Nz, "q": qz,
+                           "pwp_usage": round(usage_frac, 6),
+                           "p_active": p_active},
             "rows": records,
             # primary-shape rows only (large-K rows carry a "shape" key and
             # would otherwise clobber the per-impl summary)

@@ -20,7 +20,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np
@@ -68,9 +68,18 @@ def save_tree(path: str, tree: Any, extra: dict | None = None) -> None:
     os.replace(tmp, path)
 
 
-def restore_tree(path: str, like: Any, shardings: Any = None) -> tuple[Any, dict]:
+def restore_tree(path: str, like: Any, shardings: Any = None,
+                 missing_ok: tuple[str, ...] = ()) -> tuple[Any, dict]:
     """Restore into the structure of ``like``; re-shard to ``shardings``
-    (tree of NamedSharding) if given — the elastic-restart path."""
+    (tree of NamedSharding) if given — the elastic-restart path.
+
+    ``missing_ok`` names leaf keys (last path component) that may be absent
+    from an older checkpoint; they are filled with zeros of the ``like``
+    leaf's shape/dtype instead of failing the restore. This is the
+    forward-compat path for additive schema changes (e.g. the ``phi_*``
+    ``usage`` histograms added in PR 4: a pre-PR-4 phi checkpoint restores
+    with all-zero usage, which the policy treats as "no histogram").
+    """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     by_key = {m["key"]: m for m in manifest["leaves"]}
@@ -83,11 +92,19 @@ def restore_tree(path: str, like: Any, shardings: Any = None) -> tuple[Any, dict
         key = _key_str(kpath)
         m = by_key.get(key)
         if m is None:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        arr = np.load(os.path.join(path, m["file"]))
-        want = tuple(getattr(leaf, "shape", arr.shape))
-        if tuple(arr.shape) != want:
-            raise ValueError(f"{key}: shape {arr.shape} != expected {want}")
+            base = key.rsplit(_SEP, 1)[-1]
+            if base in missing_ok and hasattr(leaf, "shape") \
+                    and hasattr(leaf, "dtype"):
+                arr = np.zeros(leaf.shape, leaf.dtype)
+                log.info("checkpoint leaf %s absent (older schema): "
+                         "zero-filled", key)
+            else:
+                raise KeyError(f"checkpoint missing leaf {key}")
+        else:
+            arr = np.load(os.path.join(path, m["file"]))
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(f"{key}: shape {arr.shape} != expected {want}")
         if sh_leaves is not None:
             out.append(jax.device_put(arr, sh_leaves[i]))
         else:
@@ -161,11 +178,13 @@ class CheckpointManager:
         with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
             return json.load(f).get("extra", {})
 
-    def restore_latest(self, like: Any, shardings: Any = None):
+    def restore_latest(self, like: Any, shardings: Any = None,
+                       missing_ok: tuple[str, ...] = ()):
         step = self.latest_step()
         if step is None:
             return None, None, {}
-        tree, extra = restore_tree(self._step_dir(step), like, shardings)
+        tree, extra = restore_tree(self._step_dir(step), like, shardings,
+                                   missing_ok=missing_ok)
         return step, tree, extra
 
     def _gc(self) -> None:

@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.patterns import PhiConfig
 
 
 @functools.partial(jax.jit, static_argnames=())

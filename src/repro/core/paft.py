@@ -20,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.assign import assign_patterns, level1_matrix
-from repro.snn import models
 from repro.snn.models import PhiState, SNNConfig
 
 

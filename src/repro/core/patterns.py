@@ -156,6 +156,84 @@ def calibrate(
     return pats.astype(np.uint8)
 
 
+# ------------------------------------------------------- pattern usage ------
+# The paper's prefetcher (Sec. 4.4) fetches only the ~27.73% of PWPs a
+# workload actually references per M-stripe. The software analogue is a
+# calibration-time usage histogram: it gates the execution policy onto the
+# ``fused_prefetch`` lowering and sizes its static gather buffer (the
+# per-M-stripe active sets themselves are recomputed at trace time from the
+# live activations — see ``kernels.phi_fused.stripe_active_sets``).
+
+
+def pattern_usage(acts: np.ndarray | jax.Array,
+                  patterns: np.ndarray | jax.Array) -> np.ndarray:
+    """Per-partition pattern-reference histogram of a calibration batch.
+
+    acts: (..., K) binary activations; patterns: (T, q, k). Returns
+    (T, q+1) int64 counts — column j < q is how many row-partitions matched
+    pattern j, column q counts unmatched rows (the "no pattern" slot).
+    """
+    from repro.core.assign import assign_patterns  # deferred: assign imports us
+
+    T, q, k = np.asarray(patterns).shape[-3:]
+    a = np.asarray(acts, np.float32).reshape(-1, np.asarray(acts).shape[-1])
+    out = np.zeros((T, q + 1), np.int64)
+    if a.shape[0] == 0:          # empty calibration: all-zero histogram
+        return out
+    idx, _ = assign_patterns(jnp.asarray(a), jnp.asarray(patterns, jnp.float32))
+    idx = np.asarray(idx)
+    for t in range(T):
+        out[t] = np.bincount(idx[:, t], minlength=q + 1)
+    return out
+
+
+def active_pattern_sets(usage: np.ndarray, *, coverage: float = 0.9,
+                        max_frac: float = 0.5, min_assigned: float = 0.05,
+                        pad_to: int = 8) -> tuple[np.ndarray | None, float]:
+    """Hot-pattern index sets from a usage histogram, or None without skew.
+
+    Returns ``(active (T, P) int32, usage_fraction)`` where P is the
+    smallest multiple of ``pad_to`` such that the top-P patterns of every
+    partition cover ≥ ``coverage`` of that partition's assigned matches, and
+    ``usage_fraction = (P+1)/(q+1)`` is the modelled fraction of the PWP
+    bank a prefetching kernel streams. Returns ``(None, 1.0)`` when the
+    histogram shows no exploitable skew:
+
+      * empty calibration (all-zero histogram) — nothing is known;
+      * assigned fraction below ``min_assigned`` — L1 is barely used, so
+        there is nothing to prefetch;
+      * tiny banks (q ≤ pad_to) — a gather cannot beat streaming them;
+      * uniform-ish usage — covering ``coverage`` needs > ``max_frac``·q
+        patterns, so the gather saves too little to pay for itself.
+
+    Rows matching a pattern *outside* the active set fall through to the L2
+    residual (which is contracted against the resident weight stripe), so
+    restricting the match to the active set never loses exactness — the
+    decomposition changes, the product does not.
+    """
+    u = np.asarray(usage, np.float64)
+    assert u.ndim == 2 and u.shape[1] >= 2, u.shape
+    q = u.shape[1] - 1
+    assigned = u[:, :q]
+    total = u.sum()
+    if total <= 0 or assigned.sum() / total < min_assigned or q <= pad_to:
+        return None, 1.0
+    srt = np.sort(assigned, axis=1)[:, ::-1]
+    csum = np.cumsum(srt, axis=1)
+    tot_t = assigned.sum(axis=1)
+    need = 1
+    for t in range(u.shape[0]):
+        if tot_t[t] > 0:
+            need = max(need, int(np.searchsorted(
+                csum[t], coverage * tot_t[t], side="left")) + 1)
+    p_active = min(q, -(-need // pad_to) * pad_to)
+    if p_active > max_frac * q:
+        return None, 1.0
+    order = np.argsort(-assigned, kind="stable", axis=1)
+    active = np.ascontiguousarray(order[:, :p_active]).astype(np.int32)
+    return active, float(p_active + 1) / float(q + 1)
+
+
 def pattern_weight_products(patterns: jax.Array, w: jax.Array) -> jax.Array:
     """Offline PWP computation: (T, q, k) patterns × (K, N) weights -> (T, q+1, N).
 

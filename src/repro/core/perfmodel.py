@@ -117,9 +117,9 @@ def eyeriss_layer(shape: GemmShape, st: PhiStats, bytes_per_el: int = 1,
 
 
 def summarize(layers: list[LayerPerf], core_power: float = CORE_POWER_W) -> dict:
-    cycles = sum(l.cycles for l in layers)
-    ops = sum(l.ops for l in layers)
-    dram = sum(l.dram_bytes for l in layers)
+    cycles = sum(lp.cycles for lp in layers)
+    ops = sum(lp.ops for lp in layers)
+    dram = sum(lp.dram_bytes for lp in layers)
     secs = cycles / FREQ
     gops = ops / secs / 1e9
     energy = secs * (core_power + DRAM_STATIC_W) + dram * DRAM_PJ_PER_BYTE
@@ -183,19 +183,31 @@ class KernelTraffic:
 def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
                        block_m: int = 256, block_n: int = 256,
                        nnz_budget: float = 0.08, pwp_bytes_per_el: int = 4,
-                       w_bytes_per_el: int = 4) -> dict[str, KernelTraffic]:
+                       w_bytes_per_el: int = 4,
+                       pwp_usage: float | None = None
+                       ) -> dict[str, KernelTraffic]:
     """HBM bytes of the 3-kernel pipeline vs the fused single-pass kernels.
 
-    Returns {"three_kernel": ..., "fused": ..., "fused_stream": ...}. The
-    fused savings are the index and residual round-trips, the per-M-stripe
-    pattern re-fetches, and the collapse of two partial (M, N) f32 outputs
-    into one write. The K-streaming variant keeps every one of those
-    savings — activations and weights are still fetched once per M-stripe
-    per N-block and there is still no index/residual round-trip — but its
-    manually-DMA'd operands are not held across grid steps by the pipeline
-    revisit rule, so the activation block and pattern groups are re-streamed
-    per N-block (a (gn−1)·M·K cost the all-resident kernel avoids; gn == 1
-    for the large-K layer shapes the streaming path exists for).
+    Returns {"three_kernel": ..., "fused": ..., "fused_stream": ...,
+    "fused_prefetch": ...}. The fused savings are the index and residual
+    round-trips, the per-M-stripe pattern re-fetches, and the collapse of
+    two partial (M, N) f32 outputs into one write. The K-streaming variant
+    keeps every one of those savings — activations and weights are still
+    fetched once per M-stripe per N-block and there is still no
+    index/residual round-trip — but its manually-DMA'd operands are not
+    held across grid steps by the pipeline revisit rule, so the activation
+    block and pattern groups are re-streamed per N-block (a (gn−1)·M·K cost
+    the all-resident kernel avoids; gn == 1 for the large-K layer shapes
+    the streaming path exists for).
+
+    ``pwp_usage`` is the measured fraction of the PWP bank the prefetching
+    kernel streams ((P+1)/(q+1) from ``patterns.active_pattern_sets``; the
+    paper measures ≈0.2773). The ``fused_prefetch`` entry scales the PWP
+    stream by it and additionally pays the trace-time active-set pre-pass
+    (one extra read of the activations and pattern bank, plus the tiny
+    scalar-prefetched index tensor). With ``pwp_usage=None`` the entry is
+    modelled at usage 1.0 — i.e. strictly worse than "fused", which is why
+    the policy only picks it when a histogram shows skew.
     """
     M, K, N = shape.m, shape.k, shape.n
     T = K // k
@@ -237,8 +249,70 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
         coo_bytes=0.0,                             # no packing stage
         out_bytes=M * N * f32 + gm * 4,            # single write + nnz audit
     )
+    usage = 1.0 if pwp_usage is None else float(pwp_usage)
+    p_active = max(1, int(round(usage * (q + 1))) - 1)
+    fused_prefetch = KernelTraffic(
+        # trace-time active-set pre-pass reads a once more; kernel holds the
+        # block over the n sweep like "fused"
+        a_bytes=2 * M * K * f32,
+        # pre-pass reads the full bank once; the kernel DMA-gathers the
+        # per-stripe active rows inside the body, i.e. once per (i, j) grid
+        # step (gm·gn — same accounting as fused_stream's group DMAs); the
+        # scalar-prefetched (gm, T, P) index tensor rides along (int32)
+        patterns_bytes=(T * q * k * f32 + gm * gn * T * p_active * k * f32
+                        + gm * T * p_active * 4),
+        pwp_bytes=pwp_stream * usage,              # only referenced rows
+        w_bytes=w_stream,
+        idx_bytes=0.0,                             # lives in registers
+        residual_bytes=0.0,                        # lives in registers
+        coo_bytes=0.0,                             # no packing stage
+        out_bytes=M * N * f32 + gm * 4,            # single write + nnz audit
+    )
     return {"three_kernel": three, "fused": fused,
-            "fused_stream": fused_stream}
+            "fused_stream": fused_stream, "fused_prefetch": fused_prefetch}
+
+
+# --------------------------------------------- XLA path & launch overhead ---
+# One Pallas kernel dispatch, expressed in HBM byte-equivalents at the
+# Table-1 bandwidth (~1 µs of launch/teardown at 64 GB/s). Used by the
+# execution policy's cost crossover: for tiny M the fused kernels' fixed
+# full-bank streams plus this constant lose to the XLA path, whose gathers
+# touch only referenced rows.
+PALLAS_LAUNCH_BYTES = 64 * 1024
+
+
+def phi_coo_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
+                    nnz_budget: float = 0.08, pwp_bytes_per_el: int = 4,
+                    w_bytes_per_el: int = 4) -> float:
+    """First-order HBM bytes of the pure-XLA "coo" lowering.
+
+    Unlike the fused kernels (which stream the whole PWP bank and weight
+    stripe per M-stripe), the XLA path's gathers read only the rows the
+    workload references, so every term scales with M:
+
+      * activations once, (M, T) index write+read, (M, K) int8 residual
+        write+read (the round-trips fusion eliminates);
+      * L1: one (N,)-row PWP gather per assigned row-partition;
+      * L2: the capacity-bounded COO arrays plus one weight-row gather per
+        residual entry;
+      * out1/out2 partials written, read and summed.
+
+    ``q`` only shapes the bank, not the traffic — which is exactly why this
+    path wins at tiny M and loses at scale.
+    """
+    del q  # gathers touch referenced rows only; bank size cancels
+    M, K, N = shape.m, shape.k, shape.n
+    T = K // k
+    f32 = 4
+    a_bytes = M * K * f32
+    idx_bytes = M * T * 4 * 2
+    l1_bytes = M * T * N * pwp_bytes_per_el
+    residual_bytes = M * K * 2
+    nnz = nnz_budget * M * K
+    l2_bytes = nnz * (4 + 4 + 1) + nnz * N * w_bytes_per_el
+    out_bytes = M * N * f32 * 3
+    return (a_bytes + idx_bytes + l1_bytes + residual_bytes + l2_bytes
+            + out_bytes)
 
 
 # --------------------------------------------------- packer budget report ---

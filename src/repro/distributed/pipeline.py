@@ -16,7 +16,6 @@ sequential layer execution.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -5,13 +5,16 @@
 # Phi's hot spot IS a custom pipeline (paper Sec. 4); lowerings here:
 #   matcher.py / phi_gather.py / phi_spmm.py — the 3-kernel pipeline
 #   phi_fused.py — single-pass fused kernel (match + L1 + L2 in VMEM),
-#                  all-resident and K-streaming (double-buffered) variants
+#                  all-resident, K-streaming (double-buffered) and
+#                  PWP-prefetching (scalar-prefetch gather) variants
 #   lif.py — LIF neuron update
 #   ops.py — padded/jit'd public wrappers + impl dispatch (phi_matmul)
 #   ref.py — pure-jnp oracles
 from repro.kernels.phi_fused import (  # noqa: F401
     phi_fused_pallas,
+    phi_fused_prefetch_pallas,
     phi_fused_stream_pallas,
 )
 
-__all__ = ["phi_fused_pallas", "phi_fused_stream_pallas"]
+__all__ = ["phi_fused_pallas", "phi_fused_prefetch_pallas",
+           "phi_fused_stream_pallas"]

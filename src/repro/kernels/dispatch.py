@@ -20,7 +20,22 @@ Resolution order (first match wins):
   4. transform gate           — under autodiff or vmap tracing the Pallas
                                 kernels have no VJP/batching rule → "coo"
                                 (differentiable gather/scatter XLA path);
-  5. shape gate               — the fused kernel holds a (bm, K) activation
+  5. launch-cost crossover    — on the native TPU backend, tiny-M calls
+                                (decode steps) whose modelled XLA-path bytes
+                                undercut the cheapest fused lowering plus one
+                                kernel launch → "coo": the fused kernels
+                                stream the full PWP bank and weight stripe
+                                per M-stripe regardless of M, so at tiny M
+                                the fixed streams plus the launch overhead
+                                (``perfmodel.PALLAS_LAUNCH_BYTES``) dominate;
+  6. usage gate               — when the call site has a calibration
+                                pattern-usage histogram showing skew
+                                (``patterns.active_pattern_sets``) and the
+                                compact working set fits VMEM →
+                                "fused_prefetch": per-M-stripe active-set
+                                scalar-prefetch gather, only referenced PWP
+                                rows reach VMEM;
+  7. shape gate               — the fused kernel holds a (bm, K) activation
                                 block plus a (K, bn) weight stripe in VMEM;
                                 shapes where even the smallest block config
                                 busts the VMEM budget → "fused_stream" (the
@@ -29,7 +44,7 @@ Resolution order (first match wins):
                                 HBM→VMEM copies); only shapes where even
                                 streaming busts VMEM (pathological pattern
                                 counts) → "coo";
-  6. default                  — "fused", the fastest single-device lowering
+  8. default                  — "fused", the fastest single-device lowering
                                 (native on TPU, interpret mode elsewhere),
                                 with blocks from ``autotune_fused_blocks``.
 
@@ -53,12 +68,20 @@ import numpy as np
 
 from repro.utils import log
 
-IMPLS = ("fused", "fused_stream", "pallas", "coo", "ref")
-_PALLAS_IMPLS = ("fused", "fused_stream", "pallas")
-_FUSED_IMPLS = ("fused", "fused_stream")   # emit the l2_nnz audit counter
+IMPLS = ("fused", "fused_stream", "fused_prefetch", "pallas", "coo", "ref")
+_PALLAS_IMPLS = ("fused", "fused_stream", "fused_prefetch", "pallas")
+# emit the l2_nnz audit counter
+_FUSED_IMPLS = ("fused", "fused_stream", "fused_prefetch")
 _CKPT_KEY = "phi_impl"
+_USAGE_KEY = "phi_usage"
 
 _tls = threading.local()
+
+
+def _backend() -> str:
+    """Backend the policy reasons about (module-level so tests can pin a
+    native backend without owning TPU hardware)."""
+    return jax.default_backend()
 
 
 # ----------------------------------------------------------- context probes ---
@@ -139,9 +162,14 @@ class Decision:
     site: str
     shape: tuple            # (M, K, N, T, q)
     backend: str
-    # fused: (block_m, block_n); fused_stream: (block_m, block_n, group_t)
-    # — the K-group depth rides along so telemetry can report it; else None.
+    # fused/fused_prefetch: (block_m, block_n); fused_stream: (block_m,
+    # block_n, group_t) — the K-group depth rides along so telemetry can
+    # report it; else None.
     blocks: tuple | None = None
+    # fused_prefetch: measured PWP-bank usage fraction (P+1)/(q+1) and the
+    # static gather-buffer size P from the calibration histogram.
+    usage_ratio: float | None = None
+    p_active: int | None = None
 
 
 class PhiExecutionPolicy:
@@ -161,25 +189,58 @@ class PhiExecutionPolicy:
         self._decisions: dict[tuple[str, str, str], int] = {}
         # site -> runtime counters fed by the fused kernel's l2_nnz output.
         self._sites: dict[str, dict] = {}
+        # site -> (T, q+1) calibration pattern-usage histogram. Registered
+        # by the calibration paths (calibrate_lm_phi / snn PhiState) so the
+        # usage gate can fire for traced call sites whose histogram cannot
+        # ride as an operand (it must be concrete at trace time).
+        self._usage: dict[str, np.ndarray] = {}
+
+    # --------------------------------------------------------------- usage --
+    def register_usage(self, site: str, usage) -> None:
+        """Attach a calibration pattern-usage histogram ((T, q+1) counts) to
+        a dispatch site. Re-registration with the same shape accumulates
+        (scan-over-layers call sites pool their layers' histograms)."""
+        u = np.asarray(usage, np.int64)
+        with self._lock:
+            prev = self._usage.get(site)
+            if prev is not None and prev.shape == u.shape:
+                u = prev + u
+            self._usage[site] = u
+
+    def usage_for(self, site: str) -> np.ndarray | None:
+        with self._lock:
+            return self._usage.get(site)
 
     # ------------------------------------------------------------- resolve --
     def resolve(self, *, site: str = "anon", m: int, k_dim: int, n: int,
                 t: int, q: int, override: str | None = None,
                 config_override: str | None = None,
-                transform: bool = False) -> Decision:
+                transform: bool = False, usage=None) -> Decision:
         """Resolve the impl for one call. Override precedence: per-call
         ``override`` > ``config_override`` (``PhiConfig.impl`` threaded by
-        the model layer) > the policy-level override (``PHI_IMPL`` env)."""
+        the model layer) > the policy-level override (``PHI_IMPL`` env).
+
+        ``usage`` is the call site's calibration pattern-usage histogram
+        ((T, q+1) counts, host-side); defaults to whatever was registered
+        for ``site`` via :meth:`register_usage`. A skewed histogram enables
+        the ``fused_prefetch`` lowering.
+        """
+        from repro.core.patterns import active_pattern_sets
         from repro.kernels import ops
 
         for o in (override, config_override):
             if o is not None and o not in IMPLS:
                 raise ValueError(f"unknown Phi impl override {o!r} at "
                                  f"site {site!r}; expected one of {IMPLS}")
-        backend = jax.default_backend()
+        backend = _backend()
         shape = (m, k_dim, n, t, q)
         spmd = in_spmd_region()
         transform = transform or in_autodiff_region()
+        if usage is None:
+            usage = self.usage_for(site)
+        active_sets, usage_ratio = (active_pattern_sets(usage)
+                                    if usage is not None else (None, 1.0))
+        p_active = None if active_sets is None else int(active_sets.shape[-1])
         ov, which = next(
             ((o, lbl) for o, lbl in ((override, "call"),
                                      (config_override, "config"),
@@ -192,13 +253,34 @@ class PhiExecutionPolicy:
             # vmapped trace silently forces a failed compile — demote. A
             # "fused" choice whose smallest block config busts VMEM streams
             # its K axis instead (same fused dataflow, group-resident), and
-            # only falls to "coo" when even streaming doesn't fit.
+            # only falls to "coo" when even streaming doesn't fit. A
+            # "fused_prefetch" choice needs a skewed usage histogram to size
+            # its gather buffer — without one it runs the closest executable
+            # fused lowering instead.
             if spmd and ov in _PALLAS_IMPLS:
                 d = Decision("coo", f"spmd_region_demotes_{ov}", site, shape,
                              backend)
             elif transform and ov in _PALLAS_IMPLS:
                 d = Decision("coo", f"autodiff_demotes_{ov}", site, shape,
                              backend)
+            elif ov == "fused_prefetch":
+                gate = ops.fused_shape_viable(m, k_dim, n, t, q,
+                                              p_active=p_active)
+                if gate == "fused_prefetch":
+                    d = Decision(ov, f"{which}_override", site, shape,
+                                 backend)
+                elif gate == "coo":
+                    d = Decision("coo", "vmem_gate_demotes_fused_prefetch",
+                                 site, shape, backend)
+                elif p_active is not None:
+                    # Skew WAS measured — the compact working set just
+                    # busts VMEM; don't tell the operator to fix
+                    # calibration when the budget is the cause.
+                    d = Decision(gate, "vmem_gate_streams_fused_prefetch",
+                                 site, shape, backend)
+                else:                        # "fused" or "fused_stream"
+                    d = Decision(gate, "no_skew_demotes_fused_prefetch",
+                                 site, shape, backend)
             elif ov in _FUSED_IMPLS and (
                     gate := ops.fused_shape_viable(m, k_dim, n, t, q)) != ov:
                 if gate == "coo":
@@ -217,9 +299,24 @@ class PhiExecutionPolicy:
         elif transform:
             d = Decision("coo", "autodiff_or_vmap", site, shape, backend)
         else:
-            gate = ops.fused_shape_viable(m, k_dim, n, t, q)
-            if gate == "coo":
+            gate = ops.fused_shape_viable(m, k_dim, n, t, q,
+                                          p_active=p_active)
+            if gate != "coo" and backend == "tpu" and \
+                    ops.launch_cost_prefers_coo(
+                        m, k_dim, n, t, q,
+                        pwp_usage=(usage_ratio if p_active else None)):
+                # Cost crossover (native backend only — interpret-mode wall
+                # time is meaningless, and CPU runs keep the Pallas kernels
+                # exercised): at tiny M the fused kernels' fixed full-bank
+                # streams plus one kernel launch lose to the XLA path.
+                d = Decision("coo", "launch_cost_crossover", site, shape,
+                             backend)
+            elif gate == "coo":
                 d = Decision("coo", "fused_vmem_gate", site, shape, backend)
+            elif gate == "fused_prefetch":
+                d = Decision("fused_prefetch",
+                             f"pattern_usage_prefetch_{mode}", site, shape,
+                             backend)
             elif gate == "fused_stream":
                 d = Decision("fused_stream", f"vmem_gate_k_stream_{mode}",
                              site, shape, backend)
@@ -232,6 +329,11 @@ class PhiExecutionPolicy:
         elif d.impl == "fused_stream":
             d = dataclasses.replace(
                 d, blocks=ops.autotune_stream_blocks(m, k_dim, n, q, t))
+        elif d.impl == "fused_prefetch":
+            d = dataclasses.replace(
+                d, usage_ratio=usage_ratio, p_active=p_active,
+                blocks=ops.autotune_prefetch_blocks(m, k_dim, n, q, t,
+                                                    p_active))
         self._record_decision(d)
         return d
 
@@ -249,22 +351,30 @@ class PhiExecutionPolicy:
                pwp: jax.Array, *, site: str = "anon",
                override: str | None = None, config_override: str | None = None,
                nnz_budget: float = 0.08,
-               gather_dtype=None, pwp_scale=None) -> jax.Array:
+               gather_dtype=None, pwp_scale=None, usage=None) -> jax.Array:
         """Policy-dispatched ``phi_matmul``: resolve the impl from context,
-        run it, and (fused path) stream the l2_nnz audit counters out."""
+        run it, and (fused path) stream the l2_nnz audit counters out.
+
+        ``usage`` is the site's calibration pattern-usage histogram (host
+        numpy, concrete at trace time); when omitted, the policy's registry
+        (:meth:`register_usage`) is consulted for ``site``.
+        """
         from repro.kernels import ops
 
         K = a.shape[-1]
         T, q, _ = patterns.shape
         N = w.shape[-1]
         M = int(np.prod(a.shape[:-1])) if a.ndim > 1 else 1
+        if usage is None:
+            usage = self.usage_for(site)
         # patterns must be sniffed too: a vmap that batches only the pattern
         # bank (per-layer pattern sets) otherwise dispatches to a Pallas
         # impl with no batching rule and fails to compile.
         d = self.resolve(site=site, m=M, k_dim=K, n=N, t=T, q=q,
                          override=override, config_override=config_override,
                          transform=(in_autodiff_region()
-                                    or _under_transform(a, w, patterns, pwp)))
+                                    or _under_transform(a, w, patterns, pwp)),
+                         usage=usage)
         if d.impl not in _FUSED_IMPLS:
             return ops.phi_matmul(a, w, patterns, pwp, impl=d.impl,
                                   nnz_budget=nnz_budget,
@@ -275,6 +385,13 @@ class PhiExecutionPolicy:
             group_t = 0                    # all K-partitions resident
             out, nnz = ops.phi_fused(a, patterns, pwp, w, pwp_scale=pwp_scale,
                                      block_m=bm, block_n=bn)
+        elif d.impl == "fused_prefetch":
+            bm, bn = d.blocks
+            group_t = 0                    # all K-partitions resident
+            out, nnz = ops.phi_fused_prefetch(a, patterns, pwp, w,
+                                              p_active=d.p_active,
+                                              pwp_scale=pwp_scale,
+                                              block_m=bm, block_n=bn)
         else:
             bm, bn, group_t = d.blocks
             out, nnz = ops.phi_fused_stream(a, patterns, pwp, w,
@@ -284,19 +401,22 @@ class PhiExecutionPolicy:
         if self.telemetry:
             from jax.experimental import io_callback
             bm_eff = ops.effective_block_m(M, bm)
-            io_callback(lambda v, s=site, b=bm_eff, k=K, r=M, g=group_t:
-                        self._record_nnz(s, b, k, r, v, group_t=g),
+            io_callback(lambda v, s=site, b=bm_eff, k=K, r=M, g=group_t,
+                        u=d.usage_ratio:
+                        self._record_nnz(s, b, k, r, v, group_t=g,
+                                         usage_ratio=u),
                         None, nnz, ordered=False)
         return out
 
     def _record_nnz(self, site: str, block_m: int, k_dim: int, rows: int,
-                    nnz, group_t: int = 0) -> None:
+                    nnz, group_t: int = 0,
+                    usage_ratio: float | None = None) -> None:
         nnz = np.asarray(nnz)
         with self._lock:
             c = self._sites.setdefault(site, {
                 "executions": 0, "rows": 0, "l2_nnz_total": 0,
                 "l2_nnz_max_block": 0, "block_m": block_m, "k_dim": k_dim,
-                "group_t": group_t,
+                "group_t": group_t, "usage_ratio": usage_ratio,
             })
             c["executions"] += 1
             c["rows"] += rows
@@ -304,6 +424,7 @@ class PhiExecutionPolicy:
             c["l2_nnz_max_block"] = max(c["l2_nnz_max_block"],
                                         int(nnz.max(initial=0)))
             c["block_m"], c["k_dim"], c["group_t"] = block_m, k_dim, group_t
+            c["usage_ratio"] = usage_ratio
 
     # ----------------------------------------------------------- reporting --
     def decisions(self) -> dict[tuple[str, str, str], int]:
@@ -336,6 +457,7 @@ class PhiExecutionPolicy:
         with self._lock:
             self._decisions.clear()
             self._sites.clear()
+            self._usage.clear()
 
 
 # ---------------------------------------------------------- default policy ---
@@ -376,3 +498,55 @@ def apply_checkpoint_extra(cfg, extra: dict | None):
     if impl and phi is not None and getattr(phi, "impl", None) is None:
         return cfg.with_(phi=dataclasses.replace(phi, impl=impl))
     return cfg
+
+
+def usage_checkpoint_extra(usage: dict | None) -> dict:
+    """Pattern-usage histograms as a JSON-able checkpoint ``extra`` payload.
+
+    ``usage`` maps layer/site name -> (T, q+1) counts (the ``PhiState.usage``
+    dict of the SNN path; the LM path's histograms additionally live in the
+    params tree as arrays). Returned as nested lists so the checkpoint
+    manifest carries them verbatim — the restore side reconstructs with
+    :func:`usage_from_checkpoint_extra`.
+    """
+    if not usage:
+        return {}
+    return {_USAGE_KEY: {name: np.asarray(u).astype(np.int64).tolist()
+                         for name, u in usage.items()}}
+
+
+def usage_from_checkpoint_extra(extra: dict | None) -> dict:
+    """Inverse of :func:`usage_checkpoint_extra`: name -> (T, q+1) int64."""
+    raw = (extra or {}).get(_USAGE_KEY) or {}
+    return {name: np.asarray(v, np.int64) for name, v in raw.items()}
+
+
+def register_usage_from_params(params, prefix: str = "lm") -> int:
+    """Walk a calibrated LM param tree and (re-)register every ``phi_*``
+    usage histogram with the default policy under its dispatch site name
+    (``f"{prefix}.{weight}"``). Used after a checkpoint restore, where the
+    histograms arrive as params-tree arrays but the policy registry (which
+    the usage gate reads at trace time) starts empty. Returns the number of
+    sites registered."""
+    pol = get_policy()
+    count = 0
+
+    def walk(node) -> None:
+        nonlocal count
+        if not isinstance(node, dict):
+            return
+        for key, val in node.items():
+            if key.startswith("phi_") and isinstance(val, dict):
+                u = val.get("usage")
+                if u is not None:
+                    u = np.asarray(u)
+                    if u.ndim == 3:     # layer-stacked: pooled histogram
+                        u = u[0]
+                    if u.size and u.sum() > 0:
+                        pol.register_usage(f"{prefix}.{key[4:]}", u)
+                        count += 1
+            elif isinstance(val, dict):
+                walk(val)
+
+    walk(params)
+    return count

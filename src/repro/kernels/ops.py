@@ -11,8 +11,6 @@ Responsibilities:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,7 +19,12 @@ from repro.core.patterns import PhiConfig, pattern_weight_products  # noqa: F401
 from repro.kernels import ref
 from repro.kernels.lif import lif_pallas
 from repro.kernels.matcher import matcher_pallas
-from repro.kernels.phi_fused import phi_fused_pallas, phi_fused_stream_pallas
+from repro.kernels.phi_fused import (
+    phi_fused_pallas,
+    phi_fused_prefetch_pallas,
+    phi_fused_stream_pallas,
+    stripe_active_sets,
+)
 from repro.kernels.phi_gather import l1_gather_pallas
 from repro.kernels.phi_spmm import l2_spmm_pallas
 from repro.utils import cdiv
@@ -271,9 +274,22 @@ def _stream_candidates(M: int, N: int, T: int) -> list[tuple[int, int, int]]:
     return [(bm, bn, gt) for bm, bn in _fused_candidates(M, N) for gt in gts]
 
 
-def fused_shape_viable(M: int, K: int, N: int, T: int, q: int) -> str:
-    """Three-way shape gate for the execution policy: which fused lowering
-    (if any) fits the VMEM budget for this shape.
+def _prefetch_vmem_bytes(bm: int, bn: int, K: int, T: int, q: int,
+                         p_active: int) -> int:
+    """Per-program f32 working set of the PWP-prefetching kernel: the
+    all-resident layout with the pattern/PWP banks shrunk to the compact
+    active-set size (the gather buffer holds P[+1] of q[+1] rows)."""
+    return 4 * (bm * K                     # activation block
+                + T * p_active * (K // T)  # gathered pattern rows
+                + T * (p_active + 1) * bn  # gathered PWP rows + zero slot
+                + K * bn                   # weight stripe
+                + 3 * bm * bn)             # out block + L1/L2 accumulators
+
+
+def fused_shape_viable(M: int, K: int, N: int, T: int, q: int,
+                       usage=None, p_active: int | None = None) -> str:
+    """Shape gate for the execution policy: which fused lowering (if any)
+    fits the VMEM budget for this shape.
 
     Returns ``"fused"`` when some all-resident block config fits (the
     kernel holds the whole (bm, K) activation block and (K, bn) weight
@@ -281,7 +297,25 @@ def fused_shape_viable(M: int, K: int, N: int, T: int, q: int) -> str:
     K-group config fits, else ``"coo"`` (pure-XLA fallback — in practice
     only pathological pattern counts land here; K no longer matters since
     streaming holds just ``group_t`` partitions resident).
+
+    With a calibration ``usage`` histogram ((T, q+1) counts from
+    ``core.patterns.pattern_usage``): when the histogram shows exploitable
+    skew (``active_pattern_sets``) and the compact-bank working set fits,
+    the answer is ``"fused_prefetch"`` — preferred over plain ``"fused"``
+    because it streams only the referenced fraction of the PWP bank.
+    Callers that already ran ``active_pattern_sets`` (the execution policy)
+    pass the resulting gather size as ``p_active`` instead, skipping the
+    duplicate histogram analysis.
     """
+    if p_active is None and usage is not None:
+        from repro.core.patterns import active_pattern_sets
+        active, _ = active_pattern_sets(usage)
+        if active is not None:
+            p_active = int(active.shape[-1])
+    if p_active is not None:
+        if min(_prefetch_vmem_bytes(bm, bn, K, T, q, p_active)
+               for bm, bn in _fused_candidates(M, N)) <= _VMEM_BUDGET_BYTES:
+            return "fused_prefetch"
     if min(_fused_vmem_bytes(bm, bn, K, T, q)
            for bm, bn in _fused_candidates(M, N)) <= _VMEM_BUDGET_BYTES:
         return "fused"
@@ -289,6 +323,42 @@ def fused_shape_viable(M: int, K: int, N: int, T: int, q: int) -> str:
            for bm, bn, gt in _stream_candidates(M, N, T)) <= _VMEM_BUDGET_BYTES:
         return "fused_stream"
     return "coo"
+
+
+def launch_cost_prefers_coo(m: int, k_dim: int, n: int, t: int, q: int,
+                            *, nnz_budget: float = 0.08,
+                            pwp_usage: float | None = None) -> bool:
+    """Policy cost-model crossover: True when the modelled cost of the
+    pure-XLA "coo" lowering undercuts the cheapest fused lowering *plus*
+    one Pallas kernel launch.
+
+    The fused kernels stream the full PWP bank and weight stripe per
+    M-stripe regardless of M; the XLA path's gathers touch only referenced
+    rows, so its traffic scales with M. For tiny M (decode steps) the
+    fixed streams plus the launch overhead dominate — the ROADMAP's
+    "kernel launch overhead dominates on TPU" crossover. Modelled in HBM
+    byte-equivalents (``perfmodel.PALLAS_LAUNCH_BYTES``), so the answer is
+    deterministic and unit-testable.
+
+    ``pwp_usage`` (the measured (P+1)/(q+1) fraction from a skewed usage
+    histogram) lets the prefetching lowering compete: its PWP stream is
+    scaled by the fraction, so a site with a hot pattern set keeps the
+    fused dataflow down to smaller M than the full-bank kernels would.
+    """
+    from repro.core.perfmodel import (
+        GemmShape,
+        PALLAS_LAUNCH_BYTES,
+        phi_coo_traffic,
+        phi_kernel_traffic,
+    )
+    tr = phi_kernel_traffic(GemmShape(m, k_dim, n), k=k_dim // t, q=q,
+                            nnz_budget=nnz_budget, pwp_usage=pwp_usage)
+    fused_total = min(tr["fused"].total, tr["fused_stream"].total)
+    if pwp_usage is not None:
+        fused_total = min(fused_total, tr["fused_prefetch"].total)
+    coo_total = phi_coo_traffic(GemmShape(m, k_dim, n), k=k_dim // t, q=q,
+                                nnz_budget=nnz_budget)
+    return coo_total < fused_total + PALLAS_LAUNCH_BYTES
 
 
 def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
@@ -319,9 +389,11 @@ def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
         w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
         timed = []
         for bm, bn in cands:
-            fn = lambda: phi_fused_pallas(a[:bm], pats, pwp, scale, w,
-                                          block_m=bm, block_n=bn,
-                                          interpret=_interpret())
+            def fn(bm=bm, bn=bn):
+                return phi_fused_pallas(a[:bm], pats, pwp, scale, w,
+                                        block_m=bm, block_n=bn,
+                                        interpret=_interpret())
+
             jax.block_until_ready(fn())           # compile
             t0 = time.perf_counter()
             jax.block_until_ready(fn())
@@ -342,6 +414,10 @@ def autotune_stream_blocks(M: int, K: int, N: int, q: int, T: int,
     TPU (or ``PHI_AUTOTUNE=1``) candidates are timed once and cached; the
     interpret-mode heuristic takes the largest blocks under the streaming
     VMEM budget, then the deepest group (fewer DMA waits per program).
+    (Gather-buffer sizing for the usage-restricted prefetch kernel lives in
+    ``autotune_prefetch_blocks`` — the streaming kernel always keeps the
+    full (group_t, q+1, bn) PWP group resident, so shrinking its VMEM model
+    by a usage fraction would admit configs the kernel cannot run.)
     """
     import os
     key = (M, K, N, q, T)
@@ -370,16 +446,76 @@ def autotune_stream_blocks(M: int, K: int, N: int, q: int, T: int,
         w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
         timed = []
         for bm, bn, gt in cands:
-            fn = lambda: phi_fused_stream_pallas(a[:bm], pats, pwp, scale, w,
-                                                 block_m=bm, block_n=bn,
-                                                 group_t=gt,
-                                                 interpret=_interpret())
+            def fn(bm=bm, bn=bn, gt=gt):
+                return phi_fused_stream_pallas(a[:bm], pats, pwp, scale, w,
+                                               block_m=bm, block_n=bn,
+                                               group_t=gt,
+                                               interpret=_interpret())
+
             jax.block_until_ready(fn())           # compile
             t0 = time.perf_counter()
             jax.block_until_ready(fn())
             timed.append((time.perf_counter() - t0, (bm, bn, gt)))
         best = min(timed)[1]
     _STREAM_TUNE_CACHE[key] = best
+    return best
+
+
+_PREFETCH_TUNE_CACHE: dict[tuple, tuple[int, int]] = {}
+
+
+def autotune_prefetch_blocks(M: int, K: int, N: int, q: int, T: int,
+                             p_active: int,
+                             measure: bool | None = None) -> tuple[int, int]:
+    """Pick (block_m, block_n) for the PWP-prefetching fused kernel.
+
+    Same contract as ``autotune_fused_blocks``, sized with the compact-bank
+    working set (``_prefetch_vmem_bytes``): the gather buffer holds only
+    ``p_active``(+1) of ``q``(+1) pattern/PWP rows per partition, so larger
+    blocks fit than the all-resident kernel could afford.
+    """
+    import os
+    key = (M, K, N, q, T, p_active)
+    if key in _PREFETCH_TUNE_CACHE:
+        return _PREFETCH_TUNE_CACHE[key]
+    cands = [c for c in _fused_candidates(M, N)
+             if _prefetch_vmem_bytes(c[0], c[1], K, T, q, p_active)
+             <= _VMEM_BUDGET_BYTES]
+    cands = cands or [min(_fused_candidates(M, N),
+                          key=lambda c: _prefetch_vmem_bytes(
+                              c[0], c[1], K, T, q, p_active))]
+    if measure is None:
+        measure = (not _interpret()) or os.environ.get("PHI_AUTOTUNE") == "1"
+    if not measure or len(cands) == 1:
+        best = max(cands, key=lambda c: (c[0] * c[1], c[1]))
+    else:
+        import time
+        import numpy as _np
+        rng = _np.random.default_rng(0)
+        k = K // T
+        a = jnp.asarray((rng.random((max(c[0] for c in cands), K)) < 0.1),
+                        jnp.float32)
+        pats = jnp.asarray((rng.random((T, q, k)) < 0.5), jnp.float32)
+        pwp = jnp.asarray(rng.standard_normal((T, q + 1, N)), jnp.float32)
+        scale = jnp.ones((T, q + 1), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        timed = []
+        for bm, bn in cands:
+            active = jnp.broadcast_to(
+                jnp.arange(p_active, dtype=jnp.int32)[None, None],
+                (1, T, p_active))
+
+            def run(bm=bm, bn=bn, active=active):
+                return phi_fused_prefetch_pallas(
+                    a[:bm], pats, pwp, scale, w, active,
+                    block_m=bm, block_n=bn, interpret=_interpret())
+
+            jax.block_until_ready(run())          # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            timed.append((time.perf_counter() - t0, (bm, bn)))
+        best = min(timed)[1]
+    _PREFETCH_TUNE_CACHE[key] = best
     return best
 
 
@@ -471,6 +607,56 @@ def phi_fused_stream(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
     return out[:M, :N].reshape(*lead, N), nnz
 
 
+def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
+                       w: jax.Array, *, usage=None, p_active: int | None = None,
+                       pwp_scale: jax.Array | None = None,
+                       block_m: int | None = None, block_n: int | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """PWP-prefetching fused Phi matmul — ``phi_fused`` that streams only
+    the pattern-weight products a stripe actually references.
+
+    The static gather-buffer size ``p_active`` comes from the calibration
+    ``usage`` histogram (``core.patterns.active_pattern_sets``; pass either
+    ``usage`` or an explicit ``p_active``); the per-M-stripe active index
+    sets are recomputed at trace time from the live activations
+    (``stripe_active_sets``) and scalar-prefetched into the kernel on TPU.
+    Same contract and return value as ``phi_fused`` except the int32
+    ``l2_nnz`` counter reflects the *restricted* assignment (rows whose
+    best pattern is outside their stripe's active set are counted as L2
+    residual — they execute exactly, on the residual path).
+    """
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    T, q, k = patterns.shape
+    N = w.shape[-1]
+    a2 = a.reshape(-1, K)
+    M = a2.shape[0]
+    if p_active is None:
+        from repro.core.patterns import active_pattern_sets
+        if usage is None:
+            raise ValueError(
+                "phi_fused_prefetch needs a pattern-usage histogram (usage=) "
+                "or an explicit gather size (p_active=); without one there "
+                "is nothing to size the PWP gather buffer from")
+        active_sets, _ = active_pattern_sets(usage)
+        if active_sets is None:
+            raise ValueError(
+                "usage histogram shows no exploitable skew (uniform/empty "
+                "calibration or tiny bank) — use impl='fused' instead")
+        p_active = int(active_sets.shape[-1])
+    p_active = min(int(p_active), q)
+    if block_m is None or block_n is None:
+        tbm, tbn = autotune_prefetch_blocks(M, K, N, q, T, p_active)
+        block_m, block_n = block_m or tbm, block_n or tbn
+    a2, bm, bn, pwp_scale = _fused_prologue(a2, pwp, pwp_scale, T, q, N,
+                                            block_m, block_n)
+    active = stripe_active_sets(a2, patterns, p_active, bm)
+    out, nnz = phi_fused_prefetch_pallas(a2, patterns, pwp, pwp_scale, w,
+                                         active, block_m=bm, block_n=bn,
+                                         interpret=_interpret())
+    return out[:M, :N].reshape(*lead, N), nnz
+
+
 # -------------------------------------------------------- pjit-scale path ---
 def _phi_matmul_coo_chunked(a2, w, patterns, pwp, nnz_budget: float,
                             chunk_rows: int | None = None, entry_block: int = 8192,
@@ -553,19 +739,24 @@ def phi_matmul(
     group_t: int | None = None,   # fused_stream K-group depth (None: autotune)
     gather_dtype=None,
     pwp_scale=None,
+    usage=None,                   # fused_prefetch: (T, q+1) usage histogram
+    p_active: int | None = None,  # fused_prefetch: explicit gather size
 ) -> jax.Array:
     """Full Phi sparse matmul: a (..., K) binary × w (K, N) -> (..., N) f32.
 
     impl:
-      "fused"        — single-pass Pallas kernel (match + L1 + L2 fused in
-                       VMEM; index/residual never touch HBM; exact for any
-                       budget);
-      "fused_stream" — same fused pipeline, K-partition groups streamed
-                       HBM→VMEM (double-buffered async copies on TPU) so
-                       large-K shapes stay on the fused dataflow;
-      "pallas"       — matcher/gather/spmm kernels (interpret mode off-TPU);
-      "coo"          — pure-XLA gather/scatter path (pjit-safe; dry-run);
-      "ref"          — dense L2 oracle (exactness baseline).
+      "fused"          — single-pass Pallas kernel (match + L1 + L2 fused in
+                         VMEM; index/residual never touch HBM; exact for any
+                         budget);
+      "fused_stream"   — same fused pipeline, K-partition groups streamed
+                         HBM→VMEM (double-buffered async copies on TPU) so
+                         large-K shapes stay on the fused dataflow;
+      "fused_prefetch" — same fused pipeline, only the PWP rows referenced
+                         per M-stripe reach VMEM (scalar-prefetched gather;
+                         needs ``usage`` or ``p_active``);
+      "pallas"         — matcher/gather/spmm kernels (interpret mode off-TPU);
+      "coo"            — pure-XLA gather/scatter path (pjit-safe; dry-run);
+      "ref"            — dense L2 oracle (exactness baseline).
     ``nnz_budget`` is the static L2 capacity as a fraction of M·K (paper
     measures ≈3% density; default leaves 2.6× headroom). It does not apply
     to "fused"/"fused_stream"/"ref", which are budget-free.
@@ -587,6 +778,12 @@ def phi_matmul(
         out, _ = phi_fused_stream(a2, patterns, pwp, w, pwp_scale=pwp_scale,
                                   block_m=block_m, block_n=block_n,
                                   group_t=group_t)
+        return out.reshape(*lead, N)
+
+    if impl == "fused_prefetch":
+        out, _ = phi_fused_prefetch(a2, patterns, pwp, w, usage=usage,
+                                    p_active=p_active, pwp_scale=pwp_scale,
+                                    block_m=block_m, block_n=block_n)
         return out.reshape(*lead, N)
 
     from repro.core.assign import assign_patterns, pack_l2_coo_jit

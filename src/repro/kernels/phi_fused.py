@@ -37,14 +37,26 @@ HBM traffic vs the 3-kernel pipeline (modelled in
 once per M-stripe instead of once per kernel, and the two partial (M, N)
 f32 outputs (write + read + final add) collapse into a single output write.
 
-Two variants share the per-partition body (``_partition_body``):
+Three variants share the per-partition body (``_partition_body``):
 
-  * ``phi_fused_pallas``        — all T K-partitions resident in VMEM;
-  * ``phi_fused_stream_pallas`` — only ``group_t`` partitions resident,
+  * ``phi_fused_pallas``          — all T K-partitions resident in VMEM;
+  * ``phi_fused_stream_pallas``   — only ``group_t`` partitions resident,
     successive groups streamed HBM→VMEM with double-buffered
     ``pltpu.make_async_copy`` (plain per-group slicing under interpret) —
     keeps large-K layers on the fused dataflow instead of demoting them to
-    the pure-XLA "coo" path (the old ``fused_vmem_gate`` cliff).
+    the pure-XLA "coo" path (the old ``fused_vmem_gate`` cliff);
+  * ``phi_fused_prefetch_pallas`` — the paper's PWP prefetcher (Sec. 4.4:
+    only ~27.73% of PWPs are referenced per M-stripe): per-M-stripe
+    active-pattern index sets (``stripe_active_sets``, computed at trace
+    time from the live activations; the static set size comes from the
+    calibration usage histogram) select which PWP rows ever reach VMEM.
+    On TPU the indices ride a ``pltpu.PrefetchScalarGridSpec`` scalar-
+    prefetch operand and the referenced pattern/PWP rows are DMA-gathered
+    HBM→VMEM; under interpret the compact banks are built by a dense XLA
+    gather and the all-resident kernel body runs on them. Rows whose best
+    pattern is *not* in their stripe's active set fall through to the L2
+    residual, so the restriction changes the decomposition, never the
+    product.
 """
 from __future__ import annotations
 
@@ -398,4 +410,219 @@ def phi_fused_stream_pallas(
         interpret=False,
         **kwargs,
     )(*args)
+    return out, nnz[:, 0]
+
+
+# ----------------------------------------------- PWP-prefetching kernel ------
+# The all-resident and streaming kernels fetch the ENTIRE (T, q+1, bn) PWP
+# stripe per M-stripe even though a stripe's rows reference only a fraction
+# of the pattern bank (the paper measures ~27.73%). The prefetch variant
+# restricts the match to a per-stripe set of P "active" patterns — P sized
+# statically from the calibration usage histogram
+# (``core.patterns.active_pattern_sets``), the per-stripe index sets computed
+# at trace time from the live activations — so only P+1 of q+1 PWP rows per
+# partition ever reach VMEM. Exactness is preserved unconditionally: a row
+# whose best pattern is outside its stripe's active set simply matches no
+# pattern and its raw bits land in the L2 residual, which is contracted
+# against the resident weight stripe.
+
+
+def stripe_active_sets(a2: jax.Array, patterns: jax.Array, p_active: int,
+                       block_m: int) -> jax.Array:
+    """Per-M-stripe active-pattern index sets, computed at trace time.
+
+    a2: (M, K) binary with M a multiple of block_m; patterns: (T, q, k).
+    Returns (M // block_m, T, p_active) int32 — for each stripe and
+    K-partition, the ``p_active`` patterns most referenced by the stripe's
+    rows (the same Hamming-as-matmul match the kernels run, reduced to
+    per-stripe reference counts before any index ever reaches HBM).
+    """
+    M, K = a2.shape
+    T, q, k = patterns.shape
+    assert M % block_m == 0 and K == T * k, (a2.shape, patterns.shape, block_m)
+    gm = M // block_m
+    at = a2.reshape(gm, block_m, T, k).astype(jnp.float32)
+    pf = patterns.astype(jnp.float32)
+    dot = jnp.einsum("gmtk,tqk->gmtq", at, pf)
+    pop_a = at.sum(-1)                                     # (gm, bm, T)
+    ham = pop_a[..., None] + pf.sum(-1)[None, None] - 2.0 * dot
+    best = jnp.argmin(ham, axis=-1)                        # (gm, bm, T)
+    use = jnp.min(ham, axis=-1) < pop_a                    # strict rule
+    onehot = jax.nn.one_hot(best, q, dtype=jnp.float32) * use[..., None]
+    counts = onehot.sum(axis=1)                            # (gm, T, q)
+    _, top = jax.lax.top_k(counts, p_active)               # (gm, T, P)
+    return top.astype(jnp.int32)
+
+
+def _fused_prefetch_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref,
+                           out_ref, nnz_ref, *, q: int):
+    """Interpret-mode prefetch body: the all-resident pipeline over the
+    per-stripe COMPACT banks (leading singleton block axis = this stripe).
+    ``q`` here is the compact bank size ``p_active``."""
+    T, _, k = p_ref.shape[1:]
+    a = a_ref[...].astype(jnp.float32)
+    acc1 = jnp.zeros(out_ref.shape, jnp.float32)
+    acc2 = jnp.zeros(out_ref.shape, jnp.float32)
+    nnz = jnp.zeros((), jnp.int32)
+    for t in range(T):                                     # static unroll
+        acc1, acc2, nnz = _partition_body(
+            a[:, t * k:(t + 1) * k], p_ref[0, t].astype(jnp.float32),
+            pwp_ref[0, t], scale_ref[0, t], w_ref[t * k:(t + 1) * k, :],
+            acc1, acc2, nnz, q=q)
+    out_ref[...] = acc1 + acc2
+    nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
+
+
+def _fused_prefetch_kernel_sp(active_ref, a_ref, p_hbm, pwp_hbm, scale_ref,
+                              w_ref, out_ref, nnz_ref, p_buf, pwp_buf, sem,
+                              *, q: int, p_active: int, block_n: int):
+    """Native TPU prefetch body (``PrefetchScalarGridSpec``).
+
+    ``active_ref`` is the scalar-prefetched (gm, T, P) index tensor — it is
+    resident in SMEM before the body runs, so the gather DMAs can be issued
+    immediately. Patterns and PWPs live in ANY (HBM); only the rows this
+    stripe references are copied into the (T, P[+1], …) VMEM scratch. All
+    row copies are started before any wait (the DMA engine overlaps them);
+    a production kernel would additionally double-buffer across grid steps.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    T, _, k = p_hbm.shape
+
+    copies = []
+    for t in range(T):                                     # static unroll
+        for p in range(p_active):
+            row = active_ref[i, t, p]
+            copies.append(pltpu.make_async_copy(
+                p_hbm.at[t, row], p_buf.at[t, p], sem.at[t, p, 0]))
+            copies.append(pltpu.make_async_copy(
+                pwp_hbm.at[t, row, pl.ds(j * block_n, block_n)],
+                pwp_buf.at[t, p], sem.at[t, p, 1]))
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+    a = a_ref[...].astype(jnp.float32)
+    acc1 = jnp.zeros(out_ref.shape, jnp.float32)
+    acc2 = jnp.zeros(out_ref.shape, jnp.float32)
+    nnz = jnp.zeros((), jnp.int32)
+    zero_row = jnp.zeros((1, block_n), pwp_buf.dtype)
+    for t in range(T):
+        pwp_t = jnp.concatenate([pwp_buf[t], zero_row], axis=0)  # (P+1, bn)
+        acc1, acc2, nnz = _partition_body(
+            a[:, t * k:(t + 1) * k], p_buf[t].astype(jnp.float32),
+            pwp_t, scale_ref[0, t], w_ref[t * k:(t + 1) * k, :],
+            acc1, acc2, nnz, q=q)
+    out_ref[...] = acc1 + acc2
+    nnz_ref[...] = jnp.full(nnz_ref.shape, nnz, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def phi_fused_prefetch_pallas(
+    a: jax.Array,
+    patterns: jax.Array,
+    pwp: jax.Array,
+    pwp_scale: jax.Array,
+    w: jax.Array,
+    active: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """PWP-prefetching fused Phi matmul: same contract as ``phi_fused_pallas``
+    plus ``active`` (M // block_m, T, P) int32 — the per-M-stripe pattern
+    index sets from ``stripe_active_sets``. Only the referenced P+1 of q+1
+    PWP rows per partition reach VMEM (scalar-prefetch DMA gather on TPU, a
+    dense XLA gather under interpret); the match is restricted to the active
+    set and every other row falls through to the exact L2 residual path.
+
+    Returns (out (M, N) f32, l2_nnz (M // block_m,) int32 — residual entries
+    *under the restricted assignment*, ≥ the full-bank kernels' counter).
+    """
+    M, K = a.shape
+    T, q, k = patterns.shape
+    N = w.shape[-1]
+    gm = M // block_m
+    p_active = active.shape[-1]
+    assert K == T * k and M % block_m == 0 and N % block_n == 0, (
+        a.shape, patterns.shape, w.shape, block_m, block_n)
+    assert active.shape == (gm, T, p_active) and p_active <= q, active.shape
+    assert pwp.shape == (T, q + 1, N) and pwp_scale.shape == (T, q + 1)
+    grid = (gm, N // block_n)
+    out_specs = [
+        pl.BlockSpec((block_m, block_n), lambda i, j, *_: (i, j)),
+        pl.BlockSpec((1, 1), lambda i, j, *_: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((M, N), jnp.float32),
+        jax.ShapeDtypeStruct((gm, 1), jnp.int32),
+    ]
+    # Compact per-stripe dequant scales (tiny: (gm, T, P+1) f32) are built by
+    # a plain gather on both paths; slot P mirrors the bank's "none" slot.
+    tidx = jnp.arange(T)[None, :, None]
+    scale_c = jnp.concatenate(
+        [pwp_scale[tidx, active],
+         jnp.broadcast_to(pwp_scale[None, :, q, None], (gm, T, 1))],
+        axis=2).astype(jnp.float32)
+
+    if interpret:
+        # Dense-gather fallback: build the compact pattern/PWP banks with XLA
+        # gathers, then run the all-resident pipeline on them.
+        pats_c = patterns.astype(jnp.float32)[tidx, active]   # (gm, T, P, k)
+        pwp_c = jnp.concatenate(
+            [pwp[tidx, active],
+             jnp.zeros((gm, T, 1, N), pwp.dtype)], axis=2)    # (gm, T, P+1, N)
+        kernel = functools.partial(_fused_prefetch_kernel, q=p_active)
+        out, nnz = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, K), lambda i, j: (i, 0)),
+                pl.BlockSpec((1, T, p_active, k), lambda i, j: (i, 0, 0, 0)),
+                pl.BlockSpec((1, T, p_active + 1, block_n),
+                             lambda i, j: (i, 0, 0, j)),
+                pl.BlockSpec((1, T, p_active + 1), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=True,
+        )(a.astype(jnp.float32), pats_c, pwp_c, scale_c, w)
+        return out, nnz[:, 0]
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(_fused_prefetch_kernel_sp, q=p_active,
+                               p_active=p_active, block_n=block_n)
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                  # the (gm, T, P) active sets
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i, j, *_: (i, 0)),   # a (VMEM)
+            any_spec,                                              # patterns
+            any_spec,                                              # pwp
+            pl.BlockSpec((1, T, p_active + 1),
+                         lambda i, j, *_: (i, 0, 0)),              # scales
+            pl.BlockSpec((K, block_n), lambda i, j, *_: (0, j)),   # w (VMEM)
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((T, p_active, k), jnp.float32),      # gathered patterns
+            pltpu.VMEM((T, p_active, block_n), pwp.dtype),  # gathered PWP rows
+            pltpu.SemaphoreType.DMA((T, p_active, 2)),
+        ],
+    )
+    out, nnz = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=False,
+    )(active.astype(jnp.int32), a.astype(jnp.float32),
+      patterns.astype(jnp.float32), pwp, scale_c, w)
     return out, nnz[:, 0]

@@ -16,11 +16,10 @@ import argparse
 import sys
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import ARCH_IDS, get_config, phi_variant
 from repro.distributed import sharding as shd
@@ -29,7 +28,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import model
 from repro.train import optimizer as opt
 from repro.train import step as step_lib
-from repro.utils import dump_json, human_bytes, human_count, load_json, log
+from repro.utils import dump_json, human_count, load_json, log
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
 RESULTS = os.path.abspath(RESULTS)

@@ -47,13 +47,21 @@ def main() -> None:
     params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(0))
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
-        step, tree, extra = mgr.restore_latest({"params": params})
+        # missing_ok: pre-PR-4 phi checkpoints lack the usage histograms —
+        # zero-fill them (policy reads all-zero as "no histogram").
+        step, tree, extra = mgr.restore_latest({"params": params},
+                                               missing_ok=("usage",))
         if step is not None:
             params = tree["params"]
             # A persisted --phi-impl override survives restart (the live CLI
             # flag, if given, wins inside apply_checkpoint_extra).
             cfg = dispatch.apply_checkpoint_extra(cfg, extra)
-            log.info("restored params from step %d", step)
+            # Re-register the calibration usage histograms riding in the
+            # params tree so the policy's fused_prefetch usage gate works
+            # without a fresh calibration pass.
+            n_usage = dispatch.register_usage_from_params(params)
+            log.info("restored params from step %d (%d phi usage histograms)",
+                     step, n_usage)
     if args.phi:
         batch = model.dummy_batch(cfg, 2, 16, with_labels=False)
         params, stats = model.calibrate_lm_phi(cfg, params, batch)

@@ -77,7 +77,8 @@ def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
     start_step = 0
     if mgr is not None:
         got = mgr.restore_latest({"params": params, "opt": opt_state},
-                                 {"params": p_sh, "opt": o_sh} if p_sh else None)
+                                 {"params": p_sh, "opt": o_sh} if p_sh else None,
+                                 missing_ok=("usage",))
         if got[0] is not None:
             start_step, tree, extra = got
             params, opt_state = tree["params"], tree["opt"]

@@ -57,7 +57,7 @@ def _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv):
         qpos = iq * bq + jnp.arange(bq)
 
         def kv_step(carry, jk):
-            m, l, acc = carry
+            m, den, acc = carry
             kj = jax.lax.dynamic_slice_in_dim(kt, jk * bkv, bkv, 2)
             vj = jax.lax.dynamic_slice_in_dim(vt, jk * bkv, bkv, 2)
             s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj)
@@ -69,15 +69,15 @@ def _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv):
             p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
             corr = jnp.exp(m - m_new)
             corr = jnp.where(jnp.isnan(corr), 0.0, corr)
-            return (m_new, l * corr + p.sum(-1),
+            return (m_new, den * corr + p.sum(-1),
                     acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj)), None
 
         m0 = jnp.full((B, H, bq), -jnp.inf)
         l0 = jnp.zeros((B, H, bq))
         a0 = jnp.zeros((B, H, bq, D))
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
-        o = acc / jnp.maximum(l, 1e-30)[..., None]
-        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        (m, den, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        o = acc / jnp.maximum(den, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(den, 1e-30))
         return o, lse
 
     o, lse = jax.lax.map(q_block, jnp.arange(nq))    # (nq, B, H, bq, D/·)
@@ -159,7 +159,9 @@ def _flash_bwd(causal, window, chunk, block_q, block_kv, res, dout):
     dk = jnp.moveaxis(dk, 0, 2).reshape(B, H, S, D)
     dv = jnp.moveaxis(dv, 0, 2).reshape(B, H, S, D)
 
-    back = lambda x: jnp.moveaxis(x, 1, 2).astype(q.dtype)
+    def back(x):
+        return jnp.moveaxis(x, 1, 2).astype(q.dtype)
+
     return back(dq), back(dk), back(dv)
 
 

@@ -8,9 +8,6 @@ single-token decode path against a KV cache (ring-buffered for SWA).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -134,7 +131,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
         qpos = q0 + jnp.arange(block_q)
 
         def kv_step(carry, ikv):
-            m, l, acc = carry
+            m, den, acc = carry
             k0 = ikv * block_kv
             kj = jax.lax.dynamic_slice_in_dim(k, k0, block_kv, 1).astype(jnp.float32)
             vj = jax.lax.dynamic_slice_in_dim(v, k0, block_kv, 1).astype(jnp.float32)
@@ -145,15 +142,15 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(-1)
+            den_new = den * corr + p.sum(-1)
             acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vj)
-            return (m_new, l_new, acc_new), None
+            return (m_new, den_new, acc_new), None
 
         m0 = jnp.full((B, H, block_q), -jnp.inf)
         l0 = jnp.zeros((B, H, block_q))
         a0 = jnp.zeros((B, H, block_q, D))
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        (m, den, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(den, 1e-30)[..., None]
         return jnp.moveaxis(out, 1, 2).astype(q.dtype)       # (B, bq, H, D)
 
     # Checkpoint per q-block: without this, autodiff through the online-

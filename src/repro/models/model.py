@@ -24,7 +24,6 @@ embeddings; both enter the decoder as ordinary positions.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Any
 
@@ -32,13 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.patterns import PhiConfig
-from repro.distributed.sharding import ParamSpec, init_params, is_spec, shard
+from repro.distributed.sharding import ParamSpec, is_spec, shard
 from repro.kernels import dispatch
 from repro.models import layers as ll
-from repro.models import mamba2, transformer
+from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.snn.lif import LIFConfig, lif_update
-from repro.utils import cdiv
 
 
 # ------------------------------------------------------------------ specs ---
@@ -94,6 +92,13 @@ def _inject_phi_specs(cfg: ModelConfig, tree: Any) -> Any:
                     "pwp": ParamSpec(
                         lead + (T, phi.q + 1, N), lead_ax + ("pwp_tiles", None, v.axes[-1]),
                         jnp.int8 if phi.pwp_int8 else cfg.param_dtype, init="zeros"),
+                    # Calibration pattern-usage histogram (replicated; tiny).
+                    # Rides in the params tree so it survives checkpoints;
+                    # the execution policy reads it from its host-side
+                    # registry (usage must be concrete at trace time).
+                    "usage": ParamSpec(
+                        lead + (T, phi.q + 1), lead_ax + (None, None),
+                        jnp.int32, init="zeros"),
                 }
                 if phi.pwp_int8:
                     entry["pwp_scale"] = ParamSpec(
@@ -297,7 +302,8 @@ def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict
     """
     import numpy as np
     from jax.experimental import io_callback
-    from repro.core.patterns import calibrate as _calib, pattern_weight_products
+    from repro.core.patterns import calibrate as _calib, pattern_usage, \
+        pattern_weight_products
 
     captured: dict[str, list] = {}
     trace_counter: dict[str, int] = {}
@@ -346,18 +352,30 @@ def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict
                 w = np.asarray(node[k], np.float32)
                 spk = np.concatenate([s.reshape(-1, w.shape[-2]) for s in captured[key]])
                 pats = _calib(spk, phi)
+                # Pattern-usage histogram of the calibration spikes: stored
+                # in the params tree (checkpoint persistence) AND registered
+                # with the execution policy so its usage gate can size the
+                # fused_prefetch PWP gather at trace time (in-graph params
+                # are tracers there; the registry copy is concrete).
+                usage = pattern_usage(spk, pats)
+                dispatch.get_policy().register_usage(f"lm.{k}", usage)
                 if w.ndim == 2:
                     pwp = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w))
+                    usage_arr = usage
                 else:  # stacked layers: pooled patterns, per-layer PWPs
                     pwp = jax.vmap(
                         lambda wl: pattern_weight_products(jnp.asarray(pats), wl)
                     )(jnp.asarray(w))
                     pats = np.broadcast_to(pats, (w.shape[0],) + pats.shape)
+                    usage_arr = np.broadcast_to(usage, (w.shape[0],) + usage.shape)
                 from repro.core.assign import phi_stats
                 stats[key] = phi_stats(spk, pats[0] if pats.ndim == 4 else pats)
                 out["phi_" + k] = {
                     "patterns": jnp.asarray(pats, jnp.int8),
                     "pwp": jnp.asarray(pwp, cfg.param_dtype),
+                    "usage": jnp.asarray(
+                        np.clip(usage_arr, 0, np.iinfo(np.int32).max),
+                        jnp.int32),
                 }
         return out
 

@@ -19,14 +19,13 @@ capacity) and mesh-free; the correctness oracle and the smoke-test path.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
-from repro.distributed.sharding import ParamSpec, current_mesh, shard
+from repro.distributed.sharding import ParamSpec, current_mesh
 from repro.models.config import ModelConfig
 
 

@@ -17,9 +17,6 @@ GQA under TP=16 with awkward head counts (paper-exact math, §DESIGN):
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -30,7 +30,6 @@ import numpy as np
 from repro.models import model
 from repro.models.config import ModelConfig
 from repro.serve.sampling import sample
-from repro.utils import log
 
 
 @dataclasses.dataclass

@@ -223,10 +223,18 @@ def apply(
 # -------------------------------------------------------------- Phi engine ---
 @dataclasses.dataclass
 class PhiState:
-    """Calibrated Phi state: per-layer patterns and PWPs."""
+    """Calibrated Phi state: per-layer patterns, PWPs and usage histograms.
+
+    ``usage`` maps layer name -> (T, q+1) pattern-reference counts from the
+    calibration batch (``core.patterns.pattern_usage``); the execution
+    policy's usage gate sizes the ``fused_prefetch`` PWP gather from it.
+    Serialise through a checkpoint's ``extra`` dict with
+    ``dispatch.usage_checkpoint_extra`` / ``usage_from_checkpoint_extra``.
+    """
 
     patterns: dict[str, np.ndarray]
     pwp: dict[str, jax.Array]
+    usage: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
 
 def calibrate_model(
@@ -236,17 +244,20 @@ def calibrate_model(
 
     Returns (PhiState, captured spike activations in GEMM layout).
     """
+    from repro.core.patterns import pattern_usage
+
     cap: dict[str, jax.Array] = {}
     apply(params, cfg, calib_x, capture=cap)
     acts = {k: np.asarray(v) for k, v in cap.items()}
-    patterns, pwps = {}, {}
+    patterns, pwps, usage = {}, {}, {}
     for name, act in acts.items():
         pats = calibrate(act, cfg.phi)
         w = _layer_weight(params, name)
         K = pats.shape[0] * cfg.phi.k
         patterns[name] = pats
         pwps[name] = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w[:K]))
-    return PhiState(patterns, pwps), acts
+        usage[name] = pattern_usage(act[:, :K], pats)
+    return PhiState(patterns, pwps, usage), acts
 
 
 def _layer_weight(params: Params, name: str) -> np.ndarray:
@@ -288,7 +299,8 @@ def phi_apply(
         out = dispatch.phi_matmul(
             a[..., :K], w[:K], pats, phi.pwp[name], site=f"snn.{name}",
             override=impl, config_override=cfg.phi.impl,
-            nnz_budget=cfg.phi.nnz_budget)
+            nnz_budget=cfg.phi.nnz_budget,
+            usage=(phi.usage or {}).get(name))
         if K < a.shape[-1]:  # dense ragged tail (K not a multiple of phi.k)
             out = out + a[..., K:] @ w[K:]
         return out.astype(w.dtype)

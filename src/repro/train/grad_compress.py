@@ -61,7 +61,8 @@ def pod_compressed_grads(loss_fn, params, batch, ef, mesh):
         with shd.use_rules(inner_rules, shd.current_mesh()):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         out = jax.tree.map(partial(_compress_reduce, npod=npod), grads, ef)
-        is_pair = lambda x: isinstance(x, tuple)
+        def is_pair(x):
+            return isinstance(x, tuple)
         new_grads = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
         new_ef = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
         return jax.lax.pmean(loss, "pod"), new_grads, new_ef
@@ -71,7 +72,8 @@ def pod_compressed_grads(loss_fn, params, batch, ef, mesh):
             lambda x: P(*(("pod",) if podded else (None,)) + (None,) * (x.ndim - 1)),
             tree)
 
-    rep = lambda tree: jax.tree.map(lambda x: P(), tree)
+    def rep(tree):
+        return jax.tree.map(lambda x: P(), tree)
     return shard_map(
         inner, mesh=mesh, axis_names={"pod"},
         in_specs=(rep(params), pspec(batch, True), rep(ef)),

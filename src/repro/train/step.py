@@ -125,8 +125,9 @@ def make_train_step(cfg: ModelConfig, ocfg: opt.OptConfig, mesh: Mesh,
         with shd.use_rules(rules, mesh), dispatch.spmd_region(), \
                 dispatch.autodiff_region():
             trainable, phi_state = model.split_phi_state(params)
-            loss_fn = lambda tp, b: model.train_loss(
-                cfg, model.merge_phi_state(tp, phi_state), b)
+            def loss_fn(tp, b):
+                return model.train_loss(
+                    cfg, model.merge_phi_state(tp, phi_state), b)
             if cross_pod:
                 from repro.train.grad_compress import pod_compressed_grads
                 loss, grads, new_ef = pod_compressed_grads(

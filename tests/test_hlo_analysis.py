@@ -1,10 +1,8 @@
 """The trip-count-aware HLO cost walker: exactness on crafted programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.distributed.hlo_analysis import (HloCost, Roofline, _shape_bytes,
-                                            collective_bytes)
+from repro.distributed.hlo_analysis import HloCost, Roofline, _shape_bytes
 
 
 def test_shape_bytes():

@@ -1,5 +1,4 @@
 """Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,10 +6,6 @@ import pytest
 from repro.core.assign import assign_patterns, pack_l2_coo_jit
 from repro.core.patterns import PhiConfig, calibrate, pattern_weight_products
 from repro.kernels import ops, ref
-from repro.kernels.lif import lif_pallas
-from repro.kernels.matcher import matcher_pallas
-from repro.kernels.phi_gather import l1_gather_pallas
-from repro.kernels.phi_spmm import l2_spmm_pallas
 
 
 def structured_binary(rng, m, k_total, protos=6, density=0.25, flip=0.05):

@@ -1,6 +1,5 @@
 """SNN-side system tests: surrogate training works, Phi engine is lossless
 per model family, PAFT reduces L2 density without destroying accuracy."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

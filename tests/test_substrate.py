@@ -7,8 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need the optional dev dep")
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, restore_tree, save_tree
 from repro.configs import get_config
