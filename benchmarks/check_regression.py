@@ -1,23 +1,29 @@
-"""CI bench-regression gate over BENCH_kernels.json.
+"""CI bench-regression gate over BENCH_kernels.json / BENCH_sim.json.
 
-Compares a freshly generated bench file against the committed baseline
-(``benchmarks/baseline/BENCH_kernels.json``) on the *deterministic* columns
+Compares a freshly generated bench file against its committed baseline
+(``benchmarks/baseline/BENCH_*.json``) on the *deterministic* columns
 only — the ones that are pure functions of the code, not of runner load:
 
-  * ``schema`` / ``backend``           — must match exactly (a schema bump is
-    an intentional change: update the baseline in the same PR);
-  * ``hbm_model_bytes``                — the modelled HBM traffic of every
+  * ``schema`` / ``backend`` / ``kind`` — must match exactly (a schema bump
+    is an intentional change: update the baseline in the same PR);
+  * ``hbm_model_bytes``  (kernels)     — the modelled HBM traffic of every
     lowering/shape. Byte counts may not grow past ``--rtol``; advantage
     ratios (keys named ``ratio``) may not shrink past it. Improvements pass
     (and should be committed as a new baseline so they become the floor);
-  * ``dispatch_decisions``             — the execution policy's resolved impl
+  * ``dispatch_decisions`` (kernels)   — the execution policy's resolved impl
     per site. Any change (site gone, site new, different impl) fails: a
     silently flipped dispatch decision is exactly the regression class this
-    gate exists for.
+    gate exists for;
+  * ``sim``              (simulator)   — the event-driven accelerator
+    simulator's sections (``benchmarks/sim_bench.py``): cycle counts,
+    energy, DRAM bytes and cross-check error may not grow; speedup /
+    energy-efficiency ratios may not shrink. The simulator is seeded-numpy
+    deterministic, so these gate *exactly* the Table-2-class claims.
 
 Wall-time columns (``us_per_call``/``per_impl_us``) are deliberately
-ignored — they are noise on shared CI runners; the HBM model is the
-cross-backend perf claim this repo makes (see docs/kernels.md).
+ignored — they are noise on shared CI runners; the HBM model and the
+simulator schedule are the cross-backend perf claims this repo makes (see
+docs/kernels.md, docs/simulator.md).
 
 Exit status: 0 = no regression, 1 = regression (details on stdout),
 2 = bad invocation / unreadable input. ``--update`` rewrites the baseline
@@ -39,6 +45,13 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # are smaller-is-better and must fail on growth like the byte counts.
 _HIGHER_BETTER = ("ratio",)
 
+# Simulator-section column classes, matched by substring (checked in this
+# order, so "energy_eff" reads as higher-better before "energy" could claim
+# it). Columns matching neither class — utilizations, p_active, labels —
+# are informational and not gated.
+_SIM_HIGHER = ("speedup", "eff", "gops", "gop_per_j")
+_SIM_LOWER = ("cycles", "energy", "bytes", "err", "frac")
+
 
 def _load(path: str) -> dict:
     try:
@@ -58,15 +71,53 @@ def _decisions(payload: dict) -> dict[str, tuple[str, ...]]:
     return {s: tuple(sorted(v)) for s, v in by_site.items()}
 
 
+def _sim_class(col: str) -> str | None:
+    """Classify a sim-section column: "higher", "lower" or None (ignored)."""
+    for sub in _SIM_HIGHER:
+        if sub in col:
+            return "higher"
+    for sub in _SIM_LOWER:
+        if sub in col:
+            return "lower"
+    return None
+
+
 def compare(baseline: dict, current: dict, rtol: float) -> list[str]:
     """Returns a list of human-readable regression descriptions (empty =
     pass)."""
     errs: list[str] = []
-    for key in ("schema", "backend"):
+    for key in ("schema", "backend", "kind"):
         if baseline.get(key) != current.get(key):
             errs.append(f"{key}: baseline {baseline.get(key)!r} != "
                         f"current {current.get(key)!r} (intentional? "
                         f"regenerate the baseline in this PR)")
+
+    base_sim = baseline.get("sim", {})
+    cur_sim = current.get("sim", {})
+    for tag, base_cols in sorted(base_sim.items()):
+        cur_cols = cur_sim.get(tag)
+        if cur_cols is None:
+            errs.append(f"sim[{tag}]: missing from current run")
+            continue
+        for col, base_v in sorted(base_cols.items()):
+            if not isinstance(base_v, (int, float)) or isinstance(base_v, bool):
+                continue
+            cls = _sim_class(col)
+            if cls is None:
+                continue
+            cur_v = cur_cols.get(col)
+            if not isinstance(cur_v, (int, float)):
+                errs.append(f"sim[{tag}][{col}]: missing/non-numeric in "
+                            f"current run")
+            elif cls == "higher" and cur_v < base_v * (1.0 - rtol):
+                errs.append(f"sim[{tag}][{col}]: ratio shrank "
+                            f"{base_v:.4g} -> {cur_v:.4g}")
+            elif cls == "lower" and cur_v > base_v * (1.0 + rtol) + 1e-12:
+                errs.append(f"sim[{tag}][{col}]: grew "
+                            f"{base_v:.4g} -> {cur_v:.4g}")
+    for tag in sorted(set(cur_sim) - set(base_sim)):
+        errs.append(f"sim[{tag}]: new in current run — regenerate the "
+                    f"baseline to cover it")
 
     base_hbm = baseline.get("hbm_model_bytes", {})
     cur_hbm = current.get("hbm_model_bytes", {})
@@ -141,13 +192,17 @@ def main(argv: list[str] | None = None) -> int:
               f"({len(errs)} finding(s)):")
         for e in errs:
             print(f"  REGRESSION: {e}")
-        print("if intentional, regenerate with: "
-              "python benchmarks/kernels_bench.py --json && "
-              "python benchmarks/check_regression.py --update")
+        print("if intentional, regenerate the bench JSON (kernels_bench.py "
+              "--json / sim_bench.py --json) and rerun "
+              "check_regression.py with --update")
         return 1
     n_cols = sum(len(v) for v in baseline.get("hbm_model_bytes", {}).values())
+    n_sim = sum(sum(1 for c in v if _sim_class(c) is not None
+                    and isinstance(v[c], (int, float)))
+                for v in baseline.get("sim", {}).values())
     print(f"bench regression gate: OK ({n_cols} modelled-byte columns, "
-          f"{len(_decisions(baseline))} dispatch sites)")
+          f"{n_sim} sim columns, {len(_decisions(baseline))} dispatch "
+          f"sites)")
     return 0
 
 

@@ -77,6 +77,57 @@ def aggregate_stats(layers: dict) -> PhiStats:
         cols=next(iter(layers.values()))[0].cols)
 
 
+def rows_to_payload(kind: str, rows: list[str]) -> dict:
+    """Convert a benchmark's CSV-style row list (header first) into a
+    schema-tagged JSON payload: one dict per data row, numeric fields
+    parsed where they parse. Shared by the ``--json`` flags of the
+    figure-reproduction benchmarks, whose outputs ride the CI artifact
+    next to BENCH_kernels.json / BENCH_sim.json."""
+    header = rows[0].split(",")
+
+    def coerce(v: str):
+        v = v.strip()
+        try:
+            return int(v)
+        except ValueError:
+            try:
+                return float(v)
+            except ValueError:
+                return v
+
+    return {
+        "schema": 1,
+        "kind": kind,
+        "rows": [dict(zip(header, (coerce(v) for v in r.split(","))))
+                 for r in rows[1:]],
+    }
+
+
+def write_json(path: str, payload: dict) -> None:
+    import json
+
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def figure_json_cli(kind: str, default_path: str, main_fn, doc: str) -> None:
+    """Shared ``__main__`` of the figure-reproduction benches: run
+    ``main_fn`` (returning CSV-style rows), optionally write them as a
+    schema-tagged JSON payload (``--json``), print the rows."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=doc.splitlines()[0])
+    ap.add_argument("--json", nargs="?", const=default_path, default=None,
+                    metavar="PATH",
+                    help="also write structured rows as JSON (default path "
+                         f"{default_path} when the flag is given bare)")
+    args = ap.parse_args()
+    rows = main_fn()
+    if args.json:
+        write_json(args.json, rows_to_payload(kind, rows))
+    print("\n".join(rows))
+
+
 def random_matrix_stats(p: float, m: int = 4096, k_total: int = 256,
                         q: int = 128, seed: int = 42) -> PhiStats:
     rng = np.random.default_rng(seed)

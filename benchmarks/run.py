@@ -14,11 +14,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table4,table2,fig7,fig10,fig12,roofline,kernels")
+                    help="comma list: table4,table2,fig7,fig10,fig12,"
+                         "roofline,kernels,sim")
     args = ap.parse_args()
 
     from benchmarks import (fig7_dse, fig10_paft, fig12_traffic, kernels_bench,
-                            roofline, table2_accel, table4_sparsity)
+                            roofline, sim_bench, table2_accel, table4_sparsity)
 
     sections = {
         "table4": table4_sparsity.main,
@@ -28,6 +29,7 @@ def main() -> None:
         "fig12": fig12_traffic.main,
         "roofline": roofline.main,
         "kernels": kernels_bench.main,
+        "sim": sim_bench.main,
     }
     wanted = args.only.split(",") if args.only else list(sections)
     failed = []

@@ -234,6 +234,26 @@ def active_pattern_sets(usage: np.ndarray, *, coverage: float = 0.9,
     return active, float(p_active + 1) / float(q + 1)
 
 
+def top_p_sets(usage: np.ndarray, p: int) -> np.ndarray:
+    """Top-``p`` pattern indices per partition from a usage histogram.
+
+    usage: (T, q+1) counts (column q = unmatched, ignored). Returns
+    (T, p) int32 — the gather sets a prefetching consumer (the
+    ``fused_prefetch`` kernel fed runtime match telemetry, or the
+    simulator's PWP prefetcher) uses when the gather-buffer size ``p`` is
+    already fixed. Unlike :func:`active_pattern_sets` this never refuses:
+    restricting the match to *any* set is exact (missed rows fall to the
+    L2 residual), so a stale or skewless histogram costs performance, not
+    correctness.
+    """
+    u = np.asarray(usage, np.int64)
+    assert u.ndim == 2 and u.shape[1] >= 2, u.shape
+    q = u.shape[1] - 1
+    p = max(1, min(int(p), q))
+    order = np.argsort(-u[:, :q], kind="stable", axis=1)
+    return np.ascontiguousarray(order[:, :p]).astype(np.int32)
+
+
 def pattern_weight_products(patterns: jax.Array, w: jax.Array) -> jax.Array:
     """Offline PWP computation: (T, q, k) patterns × (K, N) weights -> (T, q+1, N).
 

@@ -33,16 +33,23 @@ import dataclasses
 
 from repro.core.assign import PhiStats
 
-FREQ = 500e6
-DRAM_BPC = 64e9 / FREQ          # bytes per cycle (Table 1: 64 GB/s)
-CORE_POWER_W = 0.3466           # Table 3 total (Phi)
-EYERISS_POWER_W = 0.56          # area-scaled from Table 2 (1.068 vs 0.662 mm²)
-DRAM_PJ_PER_BYTE = 20e-12
-DRAM_STATIC_W = 0.5             # DDR4 4-channel background power (DRAMsim-class)
-ARRAY_UTIL = 0.7                # adder-tree pipeline/sync/skipping efficiency
-PE_EYERISS = 168                # Eyeriss PE count (paper baseline config)
-CHANNELS = 8                    # L1/L2 adder-tree channels
-SIMD = 32                       # vector width per channel
+# Hardware parameters live in core.hwconst — the single module both this
+# analytical model and the event-driven simulator (repro.sim) read, so the
+# two perf stories can never drift apart on a constant. Names are re-bound
+# here for backwards compatibility with existing importers.
+from repro.core.hwconst import (  # noqa: F401  (re-exported constants)
+    ARRAY_UTIL,
+    CHANNELS,
+    CORE_POWER_W,
+    DRAM_BPC,
+    DRAM_PJ_PER_BYTE,
+    DRAM_STATIC_W,
+    EYERISS_POWER_W,
+    FREQ,
+    PALLAS_LAUNCH_BYTES,
+    PE_EYERISS,
+    SIMD,
+)
 
 # Reported Table 2 ratios over Spiking Eyeriss (throughput, energy-eff):
 REPORTED = {
@@ -122,7 +129,7 @@ def summarize(layers: list[LayerPerf], core_power: float = CORE_POWER_W) -> dict
     dram = sum(lp.dram_bytes for lp in layers)
     secs = cycles / FREQ
     gops = ops / secs / 1e9
-    energy = secs * (core_power + DRAM_STATIC_W) + dram * DRAM_PJ_PER_BYTE
+    energy = secs * (core_power + DRAM_STATIC_W) + dram * DRAM_PJ_PER_BYTE * 1e-12
     gopj = ops / energy / 1e9
     return {"cycles": cycles, "ops": ops, "gops": gops,
             "dram_gb": dram / 1e9, "energy_j": energy, "gop_per_j": gopj}
@@ -184,7 +191,8 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
                        block_m: int = 256, block_n: int = 256,
                        nnz_budget: float = 0.08, pwp_bytes_per_el: int = 4,
                        w_bytes_per_el: int = 4,
-                       pwp_usage: float | None = None
+                       pwp_usage: float | None = None,
+                       prefetch_prepass: bool = True
                        ) -> dict[str, KernelTraffic]:
     """HBM bytes of the 3-kernel pipeline vs the fused single-pass kernels.
 
@@ -208,6 +216,12 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
     scalar-prefetched index tensor). With ``pwp_usage=None`` the entry is
     modelled at usage 1.0 — i.e. strictly worse than "fused", which is why
     the policy only picks it when a histogram shows skew.
+
+    ``prefetch_prepass=False`` models the runtime-telemetry variant of the
+    prefetching kernel (``dispatch`` feeds ``ops.phi_fused_prefetch`` the
+    site's aggregated match histogram as ``runtime_sets``): the trace-time
+    pre-pass — one extra read of the activations and the full pattern
+    bank — disappears from the ``fused_prefetch`` entry.
     """
     M, K, N = shape.m, shape.k, shape.n
     T = K // k
@@ -251,15 +265,18 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
     )
     usage = 1.0 if pwp_usage is None else float(pwp_usage)
     p_active = max(1, int(round(usage * (q + 1))) - 1)
+    prepass = 1 if prefetch_prepass else 0
     fused_prefetch = KernelTraffic(
         # trace-time active-set pre-pass reads a once more; kernel holds the
-        # block over the n sweep like "fused"
-        a_bytes=2 * M * K * f32,
+        # block over the n sweep like "fused". With runtime-telemetry sets
+        # (prefetch_prepass=False) the extra read disappears.
+        a_bytes=(1 + prepass) * M * K * f32,
         # pre-pass reads the full bank once; the kernel DMA-gathers the
         # per-stripe active rows inside the body, i.e. once per (i, j) grid
         # step (gm·gn — same accounting as fused_stream's group DMAs); the
         # scalar-prefetched (gm, T, P) index tensor rides along (int32)
-        patterns_bytes=(T * q * k * f32 + gm * gn * T * p_active * k * f32
+        patterns_bytes=(prepass * T * q * k * f32
+                        + gm * gn * T * p_active * k * f32
                         + gm * T * p_active * 4),
         pwp_bytes=pwp_stream * usage,              # only referenced rows
         w_bytes=w_stream,
@@ -273,12 +290,12 @@ def phi_kernel_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
 
 
 # --------------------------------------------- XLA path & launch overhead ---
-# One Pallas kernel dispatch, expressed in HBM byte-equivalents at the
-# Table-1 bandwidth (~1 µs of launch/teardown at 64 GB/s). Used by the
-# execution policy's cost crossover: for tiny M the fused kernels' fixed
-# full-bank streams plus this constant lose to the XLA path, whose gathers
-# touch only referenced rows.
-PALLAS_LAUNCH_BYTES = 64 * 1024
+# PALLAS_LAUNCH_BYTES (re-exported from hwconst above): one Pallas kernel
+# dispatch in HBM byte-equivalents at the Table-1 bandwidth (~1 µs of
+# launch/teardown at 64 GB/s). Used by the execution policy's cost
+# crossover: for tiny M the fused kernels' fixed full-bank streams plus
+# this constant lose to the XLA path, whose gathers touch only referenced
+# rows.
 
 
 def phi_coo_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,

@@ -170,6 +170,12 @@ class Decision:
     # static gather-buffer size P from the calibration histogram.
     usage_ratio: float | None = None
     p_active: int | None = None
+    # fused_prefetch with runtime match telemetry: the (T, P) active sets
+    # derived from the site's aggregated match histogram. When set, the
+    # kernel gathers from these instead of running the trace-time
+    # ``stripe_active_sets`` pre-pass (one less read of the activations);
+    # None = pre-pass (the fallback, and the telemetry's source).
+    runtime_sets: Any = None
 
 
 class PhiExecutionPolicy:
@@ -210,6 +216,17 @@ class PhiExecutionPolicy:
     def usage_for(self, site: str) -> np.ndarray | None:
         with self._lock:
             return self._usage.get(site)
+
+    def runtime_usage_for(self, site: str) -> np.ndarray | None:
+        """The site's aggregated *runtime* match histogram ((T, q+1) int64),
+        fed by the prefetch pre-pass through :meth:`_record_nnz`. None until
+        the site has executed (or when every observed row-partition was
+        unmatched — there is nothing to derive gather sets from)."""
+        with self._lock:
+            hist = self._sites.get(site, {}).get("usage_runtime")
+            if hist is None or hist[:, :-1].sum() <= 0:
+                return None
+            return hist.copy()
 
     # ------------------------------------------------------------- resolve --
     def resolve(self, *, site: str = "anon", m: int, k_dim: int, n: int,
@@ -334,6 +351,19 @@ class PhiExecutionPolicy:
                 d, usage_ratio=usage_ratio, p_active=p_active,
                 blocks=ops.autotune_prefetch_blocks(m, k_dim, n, q, t,
                                                     p_active))
+            # Runtime match telemetry (aggregated by _record_nnz from the
+            # pre-pass histograms of earlier executions) supplies the
+            # gather sets directly — this trace skips the trace-time
+            # stripe_active_sets pre-pass and its extra activation read.
+            # Fallback: no telemetry yet -> pre-pass (which then feeds the
+            # telemetry).
+            rt_hist = self.runtime_usage_for(site)
+            if (rt_hist is not None and d.p_active
+                    and rt_hist.shape == (t, q + 1)):
+                from repro.core.patterns import top_p_sets
+                d = dataclasses.replace(
+                    d, runtime_sets=top_p_sets(rt_hist, d.p_active),
+                    reason=d.reason + "_runtime_sets")
         self._record_decision(d)
         return d
 
@@ -380,6 +410,7 @@ class PhiExecutionPolicy:
                                   nnz_budget=nnz_budget,
                                   gather_dtype=gather_dtype,
                                   pwp_scale=pwp_scale)
+        hist = None
         if d.impl == "fused":
             bm, bn = d.blocks
             group_t = 0                    # all K-partitions resident
@@ -388,10 +419,25 @@ class PhiExecutionPolicy:
         elif d.impl == "fused_prefetch":
             bm, bn = d.blocks
             group_t = 0                    # all K-partitions resident
-            out, nnz = ops.phi_fused_prefetch(a, patterns, pwp, w,
-                                              p_active=d.p_active,
-                                              pwp_scale=pwp_scale,
-                                              block_m=bm, block_n=bn)
+            if d.runtime_sets is not None:
+                # aggregated runtime match telemetry supplies the gather
+                # sets: no trace-time pre-pass, no extra activation read
+                out, nnz = ops.phi_fused_prefetch(
+                    a, patterns, pwp, w, p_active=d.p_active,
+                    pwp_scale=pwp_scale, block_m=bm, block_n=bn,
+                    runtime_sets=jax.numpy.asarray(d.runtime_sets))
+            elif self.telemetry:
+                # pre-pass fallback; its match histogram streams out below
+                # and becomes the runtime telemetry later traces gather from
+                out, nnz, hist = ops.phi_fused_prefetch(
+                    a, patterns, pwp, w, p_active=d.p_active,
+                    pwp_scale=pwp_scale, block_m=bm, block_n=bn,
+                    return_hist=True)
+            else:
+                out, nnz = ops.phi_fused_prefetch(a, patterns, pwp, w,
+                                                  p_active=d.p_active,
+                                                  pwp_scale=pwp_scale,
+                                                  block_m=bm, block_n=bn)
         else:
             bm, bn, group_t = d.blocks
             out, nnz = ops.phi_fused_stream(a, patterns, pwp, w,
@@ -401,16 +447,24 @@ class PhiExecutionPolicy:
         if self.telemetry:
             from jax.experimental import io_callback
             bm_eff = ops.effective_block_m(M, bm)
-            io_callback(lambda v, s=site, b=bm_eff, k=K, r=M, g=group_t,
-                        u=d.usage_ratio:
-                        self._record_nnz(s, b, k, r, v, group_t=g,
-                                         usage_ratio=u),
-                        None, nnz, ordered=False)
+            if hist is not None:
+                io_callback(lambda v, h, s=site, b=bm_eff, k=K, r=M,
+                            g=group_t, u=d.usage_ratio:
+                            self._record_nnz(s, b, k, r, v, group_t=g,
+                                             usage_ratio=u, match_hist=h),
+                            None, nnz, hist, ordered=False)
+            else:
+                io_callback(lambda v, s=site, b=bm_eff, k=K, r=M, g=group_t,
+                            u=d.usage_ratio:
+                            self._record_nnz(s, b, k, r, v, group_t=g,
+                                             usage_ratio=u),
+                            None, nnz, ordered=False)
         return out
 
     def _record_nnz(self, site: str, block_m: int, k_dim: int, rows: int,
                     nnz, group_t: int = 0,
-                    usage_ratio: float | None = None) -> None:
+                    usage_ratio: float | None = None,
+                    match_hist=None) -> None:
         nnz = np.asarray(nnz)
         with self._lock:
             c = self._sites.setdefault(site, {
@@ -425,6 +479,16 @@ class PhiExecutionPolicy:
                                         int(nnz.max(initial=0)))
             c["block_m"], c["k_dim"], c["group_t"] = block_m, k_dim, group_t
             c["usage_ratio"] = usage_ratio
+            if match_hist is not None:
+                # runtime match telemetry: per-site (T, q+1) histogram of
+                # actual pattern references, streamed by the prefetch
+                # pre-pass. resolve() derives later traces' gather sets
+                # from this aggregate (reason suffix "_runtime_sets").
+                h = np.asarray(match_hist, np.int64)
+                prev = c.get("usage_runtime")
+                if prev is not None and prev.shape == h.shape:
+                    h = prev + h
+                c["usage_runtime"] = h
 
     # ----------------------------------------------------------- reporting --
     def decisions(self) -> dict[tuple[str, str, str], int]:

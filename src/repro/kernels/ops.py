@@ -610,8 +610,9 @@ def phi_fused_stream(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
 def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
                        w: jax.Array, *, usage=None, p_active: int | None = None,
                        pwp_scale: jax.Array | None = None,
-                       block_m: int | None = None, block_n: int | None = None
-                       ) -> tuple[jax.Array, jax.Array]:
+                       block_m: int | None = None, block_n: int | None = None,
+                       runtime_sets: jax.Array | None = None,
+                       return_hist: bool = False):
     """PWP-prefetching fused Phi matmul — ``phi_fused`` that streams only
     the pattern-weight products a stripe actually references.
 
@@ -624,6 +625,14 @@ def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
     ``l2_nnz`` counter reflects the *restricted* assignment (rows whose
     best pattern is outside their stripe's active set are counted as L2
     residual — they execute exactly, on the residual path).
+
+    ``runtime_sets`` ((T, P) int32, concrete) supplies the active sets
+    from aggregated *runtime match telemetry* instead — the trace-time
+    pre-pass (and its extra read of the activations) is skipped and the
+    same sets serve every stripe. Exactness is unchanged for any set
+    choice. ``return_hist`` (pre-pass path only) additionally returns the
+    (T, q+1) match histogram the pre-pass computed, so the caller can
+    aggregate it as that telemetry.
     """
     lead = a.shape[:-1]
     K = a.shape[-1]
@@ -631,6 +640,8 @@ def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
     N = w.shape[-1]
     a2 = a.reshape(-1, K)
     M = a2.shape[0]
+    if runtime_sets is not None and p_active is None:
+        p_active = int(runtime_sets.shape[-1])
     if p_active is None:
         from repro.core.patterns import active_pattern_sets
         if usage is None:
@@ -650,11 +661,31 @@ def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
         block_m, block_n = block_m or tbm, block_n or tbn
     a2, bm, bn, pwp_scale = _fused_prologue(a2, pwp, pwp_scale, T, q, N,
                                             block_m, block_n)
-    active = stripe_active_sets(a2, patterns, p_active, bm)
+    hist = None
+    if runtime_sets is not None:
+        rs = jnp.asarray(runtime_sets, jnp.int32)
+        if rs.shape != (T, p_active):
+            raise ValueError(
+                f"runtime_sets shape {rs.shape} does not match the gather "
+                f"buffer (T={T}, p_active={p_active}); derive them with "
+                "core.patterns.top_p_sets(hist, p_active)")
+        active = jnp.broadcast_to(rs[None], (a2.shape[0] // bm, T, p_active))
+        if return_hist:
+            raise ValueError("return_hist requires the pre-pass path "
+                             "(runtime_sets=None): with runtime sets there "
+                             "is no in-graph match histogram to return")
+    elif return_hist:
+        active, hist = stripe_active_sets(a2, patterns, p_active, bm,
+                                          return_hist=True, rows=M)
+    else:
+        active = stripe_active_sets(a2, patterns, p_active, bm)
     out, nnz = phi_fused_prefetch_pallas(a2, patterns, pwp, pwp_scale, w,
                                          active, block_m=bm, block_n=bn,
                                          interpret=_interpret())
-    return out[:M, :N].reshape(*lead, N), nnz
+    out = out[:M, :N].reshape(*lead, N)
+    if return_hist:
+        return out, nnz, hist
+    return out, nnz
 
 
 # -------------------------------------------------------- pjit-scale path ---

@@ -428,7 +428,8 @@ def phi_fused_stream_pallas(
 
 
 def stripe_active_sets(a2: jax.Array, patterns: jax.Array, p_active: int,
-                       block_m: int) -> jax.Array:
+                       block_m: int, return_hist: bool = False,
+                       rows: int | None = None):
     """Per-M-stripe active-pattern index sets, computed at trace time.
 
     a2: (M, K) binary with M a multiple of block_m; patterns: (T, q, k).
@@ -436,6 +437,17 @@ def stripe_active_sets(a2: jax.Array, patterns: jax.Array, p_active: int,
     K-partition, the ``p_active`` patterns most referenced by the stripe's
     rows (the same Hamming-as-matmul match the kernels run, reduced to
     per-stripe reference counts before any index ever reaches HBM).
+
+    With ``return_hist`` additionally returns the (T, q+1) int32 match
+    histogram of the whole call (stripe counts summed, column q counting
+    unmatched row-partitions) — the runtime match telemetry the execution
+    policy aggregates per site so that *later* traces can skip this
+    pre-pass entirely and gather from the aggregated histogram instead
+    (``dispatch`` passes it back as ``runtime_sets``). ``rows`` is the
+    *unpadded* row count: ``a2`` arrives zero-padded to a ``block_m``
+    multiple, and padding rows must not count as unmatched tiles (they can
+    never be assigned — all-zero rows match nothing under the strict rule
+    — so only the unmatched column needs the correction).
     """
     M, K = a2.shape
     T, q, k = patterns.shape
@@ -451,7 +463,13 @@ def stripe_active_sets(a2: jax.Array, patterns: jax.Array, p_active: int,
     onehot = jax.nn.one_hot(best, q, dtype=jnp.float32) * use[..., None]
     counts = onehot.sum(axis=1)                            # (gm, T, q)
     _, top = jax.lax.top_k(counts, p_active)               # (gm, T, P)
-    return top.astype(jnp.int32)
+    if not return_hist:
+        return top.astype(jnp.int32)
+    assigned = counts.sum(axis=0)                          # (T, q)
+    unmatched = (jnp.full((T, 1), float(M if rows is None else rows)) -
+                 assigned.sum(-1, keepdims=True))
+    hist = jnp.concatenate([assigned, unmatched], axis=-1).astype(jnp.int32)
+    return top.astype(jnp.int32), hist
 
 
 def _fused_prefetch_kernel(a_ref, p_ref, pwp_ref, scale_ref, w_ref,

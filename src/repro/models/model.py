@@ -288,26 +288,21 @@ def make_matmul(cfg: ModelConfig):
     return mm
 
 
-def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict:
-    """Fill the zero-initialised Phi state from real spike statistics.
+def _capture_phi_spikes(cfg: ModelConfig, params: dict,
+                        sample_batch: dict) -> dict[str, list]:
+    """Shared spike-capture pass of the phi-LM paths.
 
-    The capture pass runs the forward with an instrumented matmul that emits
-    each GEMM's spike trains through ``io_callback``. Under scan-over-layers
-    each traced call site fires once per layer iteration, so the captured
-    list per call site holds every layer's spikes; patterns are calibrated on
-    the pooled spikes (shared across a stack's layers — PWPs are still
-    per-layer via vmap against each layer's weights). Call sites are keyed by
-    (weight name, occurrence), which matches the parameter-tree traversal
-    order by construction (both follow dict insertion order).
+    Runs the forward with dense math and an instrumented matmul that
+    rate-codes every Phi-eligible GEMM operand and emits the spike trains
+    through ``io_callback``. Returns {call-site key: [spike arrays]} with
+    keys ``f"{weight_name}#{occurrence}"`` — the scheme the params-tree
+    walks of ``calibrate_lm_phi`` and ``capture_lm_phi_traces`` mirror.
     """
     import numpy as np
     from jax.experimental import io_callback
-    from repro.core.patterns import calibrate as _calib, pattern_usage, \
-        pattern_weight_products
 
     captured: dict[str, list] = {}
     trace_counter: dict[str, int] = {}
-    stats: dict[str, Any] = {}
     lif = LIFConfig()
     phi = cfg.phi
 
@@ -331,9 +326,73 @@ def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict
     # capture pass (dense math, spike stats only)
     out, _ = _forward(cfg.with_(spiking=False), params, sample_batch, matmul=capture_mm)
     # ordered io_callbacks run asynchronously: flush them before reading
-    # ``captured``, or the walk below races an empty dict.
+    # ``captured``, or the consumer walk races an empty dict.
     jax.block_until_ready(out)
     jax.effects_barrier()
+    return captured
+
+
+def capture_lm_phi_traces(cfg: ModelConfig, params: dict,
+                          sample_batch: dict) -> list:
+    """Capture simulator traces from a *calibrated* phi-LM's real spikes.
+
+    Re-runs the spike-capture pass and pairs each call site's pooled spike
+    rows with the ``phi_*`` pattern bank already in the params tree,
+    yielding one ``repro.sim.LayerTrace`` per Phi GEMM site (stacked-layer
+    sites use the pooled patterns, like calibration did). The LM-side hook
+    for the cycle-approximate accelerator simulator.
+    """
+    import numpy as np
+    from repro.sim.trace import trace_from_acts
+
+    captured = _capture_phi_spikes(cfg, params, sample_batch)
+    traces = []
+    walk_counter: dict[str, int] = {}
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            if isinstance(v, dict) and not k.startswith("phi_"):
+                walk(v)
+            if "phi_" + k in node:
+                key = f"{k}#{walk_counter.get(k, 0)}"
+                walk_counter[k] = walk_counter.get(k, 0) + 1
+                if key not in captured:
+                    continue
+                phi_p = node["phi_" + k]
+                pats = np.asarray(phi_p["patterns"])
+                if pats.ndim == 4:      # stacked layers: pooled patterns
+                    pats = pats[0]
+                w = np.asarray(node[k])
+                spk = np.concatenate(
+                    [s.reshape(-1, w.shape[-2]) for s in captured[key]])
+                traces.append(trace_from_acts(
+                    f"lm.{key}", spk, pats.astype(np.uint8), w.shape[-1]))
+
+    walk(params)
+    return traces
+
+
+def calibrate_lm_phi(cfg: ModelConfig, params: dict, sample_batch: dict) -> dict:
+    """Fill the zero-initialised Phi state from real spike statistics.
+
+    The capture pass runs the forward with an instrumented matmul that emits
+    each GEMM's spike trains through ``io_callback``. Under scan-over-layers
+    each traced call site fires once per layer iteration, so the captured
+    list per call site holds every layer's spikes; patterns are calibrated on
+    the pooled spikes (shared across a stack's layers — PWPs are still
+    per-layer via vmap against each layer's weights). Call sites are keyed by
+    (weight name, occurrence), which matches the parameter-tree traversal
+    order by construction (both follow dict insertion order).
+    """
+    import numpy as np
+    from repro.core.patterns import calibrate as _calib, pattern_usage, \
+        pattern_weight_products
+
+    stats: dict[str, Any] = {}
+    phi = cfg.phi
+    captured = _capture_phi_spikes(cfg, params, sample_batch)
 
     walk_counter: dict[str, int] = {}
 

@@ -1,0 +1,33 @@
+"""Cycle-approximate, event-driven simulator of the Phi accelerator.
+
+The analytical model (``core.perfmodel``) answers "what do the closed-form
+cycle/energy expressions say"; this package answers "what does a
+discrete-event walk of the microarchitecture over a *real trace* say" —
+matcher array, PWP buffer + usage-driven prefetcher, L1 accumulator,
+finite-capacity L2 packer, sparse PE array and a DRAM channel with
+double-buffered DMA, each a composable unit with cycle and per-access
+energy ledgers (``repro.core.hwconst`` is the single parameter source for
+both stories).
+
+Entry points:
+
+  * :mod:`repro.sim.trace`  — ``LayerTrace`` capture (SNN/LM model paths,
+    synthetic Zipf/density sweeps);
+  * :mod:`repro.sim.accel`  — ``PhiAcceleratorSim`` / ``EyerissSim``;
+  * ``benchmarks/sim_bench.py`` — the Table-2/Fig-10-class comparison,
+    CI-gated via ``BENCH_sim.json``.
+"""
+from repro.sim.accel import (  # noqa: F401
+    EyerissSim,
+    LayerSimResult,
+    PhiSimConfig,
+    PhiAcceleratorSim,
+    summarize_run,
+)
+from repro.sim.trace import (  # noqa: F401
+    LayerTrace,
+    density_sweep_traces,
+    synthetic_zipf_trace,
+    trace_from_acts,
+    vgg16_table4_traces,
+)

@@ -267,6 +267,32 @@ def _layer_weight(params: Params, name: str) -> np.ndarray:
     return np.asarray(w)
 
 
+def capture_phi_traces(
+    params: Params, cfg: SNNConfig, phi: PhiState, x: jax.Array,
+) -> list:
+    """Capture per-layer simulator traces from a real forward pass.
+
+    Runs ``apply`` with activation capture and converts every calibrated
+    layer's binary GEMM activations into a ``repro.sim.LayerTrace`` (same
+    pattern bank the Phi execution paths use). The captured GEMM rows
+    already cover timesteps × batch (``_maybe_capture`` flattens them), so
+    ``reps`` stays 1. This is the SNN-side trace hook for the
+    cycle-approximate accelerator simulator.
+    """
+    from repro.sim.trace import trace_from_acts
+
+    cap: dict[str, jax.Array] = {}
+    apply(params, cfg, x, capture=cap)
+    traces = []
+    for name, pats in phi.patterns.items():
+        if name not in cap:
+            continue
+        n_out = _layer_weight(params, name).shape[-1]
+        traces.append(trace_from_acts(
+            f"snn.{name}", np.asarray(cap[name]), pats, n_out))
+    return traces
+
+
 def phi_apply(
     params: Params, cfg: SNNConfig, phi: PhiState, x: jax.Array,
     impl: str | None = None

@@ -258,6 +258,127 @@ def test_stripe_active_sets_shape_and_content():
     assert act.min() >= 0 and act.max() < pats.shape[1]
 
 
+def test_stripe_active_sets_returns_match_histogram():
+    from repro.kernels.phi_fused import stripe_active_sets
+    a, w, pats, pwp, usage = zipf_setup(m=256)
+    T, q = pats.shape[0], pats.shape[1]
+    active, hist = stripe_active_sets(a, pats, 16, 128, return_hist=True)
+    assert active.shape == (2, T, 16) and hist.shape == (T, q + 1)
+    h = np.asarray(hist)
+    # every row-partition lands somewhere (col q = unmatched)
+    assert (h.sum(axis=1) == 256).all()
+    # the in-graph histogram agrees with the host-side calibration one
+    # (same activations, same bank, same strict match rule)
+    np.testing.assert_array_equal(h, np.asarray(usage))
+    # non-multiple M: zero-padding rows must NOT count as unmatched —
+    # the kernel wrapper passes the unpadded row count through
+    import jax
+    out, nnz, h2 = ops.phi_fused_prefetch(a[:200], pats, pwp, w,
+                                          p_active=16, return_hist=True)
+    jax.block_until_ready(out)
+    h2 = np.asarray(h2)
+    assert (h2.sum(axis=1) == 200).all(), h2.sum(axis=1)
+
+
+def test_top_p_sets_orders_by_mass():
+    from repro.core.patterns import top_p_sets
+    hist = np.zeros((2, 9), np.int64)
+    hist[0, [3, 1, 5]] = [100, 50, 10]
+    hist[1, [7, 0]] = [9, 8]
+    sets = top_p_sets(hist, 2)
+    assert sets.shape == (2, 2) and sets.dtype == np.int32
+    assert list(sets[0]) == [3, 1] and list(sets[1]) == [7, 0]
+    # p is clamped to the bank size
+    assert top_p_sets(hist, 99).shape == (2, 8)
+
+
+def test_runtime_sets_arg_validation():
+    a, w, pats, pwp, usage = zipf_setup(m=128)
+    T = pats.shape[0]
+    bad = jnp.zeros((T, 3), jnp.int32)
+    with pytest.raises(ValueError, match="runtime_sets shape"):
+        ops.phi_fused_prefetch(a, pats, pwp, w, p_active=16,
+                               runtime_sets=bad)
+    good = jnp.zeros((T, 16), jnp.int32)
+    with pytest.raises(ValueError, match="return_hist requires"):
+        ops.phi_fused_prefetch(a, pats, pwp, w, runtime_sets=good,
+                               return_hist=True)
+
+
+# ------------------------------- runtime-telemetry-driven active sets -------
+def test_runtime_match_telemetry_replaces_prepass_bitwise():
+    """ROADMAP item: the first trace runs the stripe_active_sets pre-pass
+    and streams its match histogram into the policy's per-site aggregates
+    (_record_nnz); later traces derive the gather sets from that runtime
+    telemetry instead (reason suffix "_runtime_sets") — with BIT-identical
+    results under dyadic weights, and the pre-pass as fallback."""
+    import jax
+
+    a, w, pats, pwp, usage = zipf_setup(m=256, dyadic=True)
+    T, q = pats.shape[0], pats.shape[1]
+    pol = dispatch.get_policy()
+    pol.register_usage("t.rt", usage)
+
+    d1 = pol.resolve(site="t.rt", m=256, k_dim=64, n=256, t=T, q=q)
+    assert d1.impl == "fused_prefetch" and d1.runtime_sets is None
+    assert pol.runtime_usage_for("t.rt") is None     # nothing executed yet
+
+    out1 = pol.matmul(a, w, pats, pwp, site="t.rt")  # pre-pass path
+    jax.effects_barrier()
+    rt = pol.runtime_usage_for("t.rt")
+    assert rt is not None and rt.shape == (T, q + 1)
+    # aggregated runtime histogram == the calibration histogram here (same
+    # activations through the same matcher math)
+    np.testing.assert_array_equal(rt, np.asarray(usage))
+
+    d2 = pol.resolve(site="t.rt", m=256, k_dim=64, n=256, t=T, q=q)
+    assert d2.impl == "fused_prefetch"
+    assert d2.reason.endswith("_runtime_sets")
+    assert d2.runtime_sets is not None
+    assert d2.runtime_sets.shape == (T, d2.p_active)
+
+    out2 = pol.matmul(a, w, pats, pwp, site="t.rt")  # runtime-sets path
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+    out_coo = ops.phi_matmul(a, w, pats, pwp, impl="coo")
+    assert np.array_equal(np.asarray(out2), np.asarray(out_coo))
+
+    # telemetry keeps aggregating across executions
+    jax.effects_barrier()
+    rt2 = pol.runtime_usage_for("t.rt")
+    assert rt2.sum() == rt.sum()  # runtime-sets path adds no pre-pass hist
+
+
+def test_runtime_sets_fall_back_to_prepass_for_fresh_site():
+    """A site with a calibration histogram but no executions keeps using
+    the trace-time pre-pass (runtime_sets is None on every resolve until
+    telemetry lands)."""
+    _, _, pats, _, usage = zipf_setup(m=128)
+    T, q = pats.shape[0], pats.shape[1]
+    pol = dispatch.get_policy()
+    pol.register_usage("t.fresh", usage)
+    for _ in range(3):
+        d = pol.resolve(site="t.fresh", m=128, k_dim=64, n=256, t=T, q=q)
+        assert d.impl == "fused_prefetch" and d.runtime_sets is None
+
+
+def test_perfmodel_prepass_toggle_drops_exact_bytes():
+    """phi_kernel_traffic(prefetch_prepass=False) models the runtime-sets
+    kernel: exactly one (M, K) f32 activation read and one full-bank read
+    cheaper than the pre-pass variant, identical everywhere else."""
+    from repro.core.perfmodel import GemmShape, phi_kernel_traffic
+    shape, k, q = GemmShape(512, 128, 256), 16, 128
+    on = phi_kernel_traffic(shape, k=k, q=q, pwp_usage=0.25)
+    off = phi_kernel_traffic(shape, k=k, q=q, pwp_usage=0.25,
+                             prefetch_prepass=False)
+    T = shape.k // k
+    assert on["fused_prefetch"].a_bytes - off["fused_prefetch"].a_bytes \
+        == shape.m * shape.k * 4
+    assert (on["fused_prefetch"].patterns_bytes
+            - off["fused_prefetch"].patterns_bytes) == T * q * k * 4
+    for entry in ("fused", "fused_stream", "three_kernel"):
+        assert on[entry].total == off[entry].total
+
+
 # --------------------------------------- acceptance: Zipf-skewed workload ---
 def test_acceptance_zipf_policy_prefetch_bitwise_and_traffic():
     """ISSUE acceptance: on a Zipfian workload (top 32 of 128 patterns cover

@@ -1,0 +1,326 @@
+"""Cycle-approximate accelerator simulator: conservation invariants,
+determinism, cross-validation against the analytical perf model, and the
+Table-2-class acceptance (Phi ≥ 2× modelled speedup and energy efficiency
+over the Eyeriss-class dense-skipping baseline on the VGG-16 GEMM shapes).
+"""
+import copy
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import hwconst as hw
+from repro.sim import (
+    EyerissSim,
+    PhiAcceleratorSim,
+    PhiSimConfig,
+    density_sweep_traces,
+    summarize_run,
+    synthetic_zipf_trace,
+    trace_from_acts,
+    vgg16_table4_traces,
+)
+from repro.sim.accel import tpu_traffic_crosscheck
+from repro.sim.engine import Engine, merge_reports
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def vgg_traces():
+    return vgg16_table4_traces()
+
+
+@pytest.fixture(scope="module")
+def zipf_trace():
+    return synthetic_zipf_trace(m=512, k_dim=128, n=128, reps=3, seed=1)
+
+
+# ------------------------------------------------------------ trace layer ---
+def test_trace_matches_jax_assignment():
+    """The numpy assignment mirror agrees with core.assign.assign_patterns
+    (same idx, same residual nnz) on a real workload."""
+    import jax.numpy as jnp
+    from repro.core.assign import assign_patterns
+    from repro.core.patterns import PhiConfig, calibrate
+
+    rng = np.random.default_rng(0)
+    a = (rng.random((128, 64)) < 0.2).astype(np.float32)
+    pats = calibrate(a, PhiConfig(k=16, q=32, iters=5))
+    tr = trace_from_acts("t", a, pats, n=64)
+    idx, residual = assign_patterns(jnp.asarray(a), jnp.asarray(pats, jnp.float32))
+    np.testing.assert_array_equal(tr.idx, np.asarray(idx))
+    res_nnz = (np.asarray(residual) != 0).reshape(128, 4, 16).sum(-1)
+    np.testing.assert_array_equal(tr.tile_res, res_nnz)
+    assert tr.bit_nnz == int(a.sum())
+
+
+def test_trace_usage_histogram_sums_to_rows(zipf_trace):
+    assert (zipf_trace.usage.sum(axis=1) == zipf_trace.m).all()
+
+
+# ----------------------------------------------------- conservation rules ---
+def test_every_l2_nonzero_processed_exactly_once(zipf_trace, vgg_traces):
+    """Sparse-PE entries == packer entries == restricted-assignment residual
+    count × reps: nothing dropped, nothing double-counted."""
+    from repro.core.patterns import active_pattern_sets
+    from repro.sim.accel import _restricted_split
+
+    for tr in [zipf_trace] + list(vgg_traces[:3]):
+        for cfg in (PhiSimConfig(), PhiSimConfig(prefetch=False)):
+            r = PhiAcceleratorSim(cfg).run_layer(tr)
+            active, _ = (active_pattern_sets(tr.usage) if cfg.prefetch
+                         else (None, 1.0))
+            _, l2_per_tile = _restricted_split(tr, active)
+            expect = int(l2_per_tile.sum()) * max(1, tr.reps)
+            assert r.l2_processed == expect, (tr.name, cfg.prefetch)
+            pe_ops = r.units["l2_pe"]["counters"].get("simd_op", 0)
+            assert pe_ops == 0 or r.l2_processed > 0
+
+
+def test_restricted_assignment_never_below_unrestricted(zipf_trace):
+    """Prefetch restriction moves work to L2, never removes it."""
+    r_pf = PhiAcceleratorSim().run_layer(zipf_trace)
+    r_full = PhiAcceleratorSim(PhiSimConfig(prefetch=False)).run_layer(
+        zipf_trace)
+    assert r_pf.l2_processed >= r_full.l2_processed
+    assert r_full.l2_processed == zipf_trace.l2_nnz * zipf_trace.reps
+
+
+def test_cycles_monotone_in_l2_density():
+    traces = density_sweep_traces()
+    densities = [t.l2_density for t in traces]
+    assert densities == sorted(densities)        # nested by construction
+    cycles = [PhiAcceleratorSim().run_layer(t).cycles for t in traces]
+    assert cycles == sorted(cycles), list(zip(densities, cycles))
+    assert cycles[-1] > cycles[0]                # and strictly responsive
+
+
+def test_energy_total_is_sum_of_unit_energies(zipf_trace, vgg_traces):
+    for tr in [zipf_trace, vgg_traces[4]]:
+        for sim in (PhiAcceleratorSim(), EyerissSim()):
+            r = sim.run_layer(tr)
+            assert r.energy_total_pj == pytest.approx(
+                sum(r.energy_pj.values()), rel=1e-12)
+            # every charged unit appears in the breakdown, incl. statics
+            assert any(k.startswith("static_") for k in r.energy_pj)
+
+
+def test_same_seed_runs_bit_identical():
+    def one():
+        tr = synthetic_zipf_trace(m=256, k_dim=128, n=64, reps=2, seed=9)
+        r = PhiAcceleratorSim().run_layer(tr)
+        return json.dumps({"cycles": r.cycles, "energy": r.energy_pj,
+                           "dram": r.dram_bytes, "units": r.units},
+                          sort_keys=True)
+
+    assert one() == one()
+
+
+# ------------------------------------------------- packer / budget bridge ---
+def test_packer_capacity_crosschecks_budget_report(zipf_trace):
+    """The sim packer's cap_required equals what perfmodel's packer-budget
+    aggregation derives from equivalent per-stripe counters."""
+    from repro.core.perfmodel import packer_budget_report
+
+    cfg = PhiSimConfig(prefetch=False)
+    r = PhiAcceleratorSim(cfg).run_layer(zipf_trace)
+    counters = {"sim.layer": {
+        "executions": r.reps, "rows": zipf_trace.m * r.reps,
+        "l2_nnz_total": r.l2_processed,
+        "l2_nnz_max_block": r.l2_nnz_max_stripe,
+        "block_m": min(cfg.block_m, zipf_trace.m),
+        "k_dim": zipf_trace.k_dim}}
+    (budget,) = packer_budget_report(counters)
+    assert budget.cap_required == r.packer_cap_required
+    assert budget.l2_nnz_total == r.l2_processed
+
+
+def test_finite_packer_capacity_serialises_not_drops():
+    tr = density_sweep_traces(densities=(0.4,), m=512, k_dim=256)[0]
+    small = PhiAcceleratorSim(PhiSimConfig(packer_cap=1024)).run_layer(tr)
+    big = PhiAcceleratorSim(PhiSimConfig(packer_cap=1 << 20)).run_layer(tr)
+    assert small.l2_processed == big.l2_processed    # conservation
+    assert small.packer_rounds_max > 1
+    assert small.cycles >= big.cycles                # rounds cost cycles
+
+
+# ------------------------------------------- cross-validation vs perfmodel ---
+@pytest.mark.parametrize("cfg", [
+    PhiSimConfig(prefetch=False),
+    PhiSimConfig(),
+    PhiSimConfig(prefetch_prepass=False),
+], ids=["fused", "prefetch_prepass", "prefetch_runtime"])
+def test_sim_dram_within_10pct_of_kernel_traffic_model(vgg_traces, cfg):
+    for tr in vgg_traces:
+        cc = tpu_traffic_crosscheck(tr, cfg)
+        assert cc["rel_err"] <= 0.10, (tr.name, cc)
+
+
+def test_asic_dram_tracks_phi_layer_model(vgg_traces):
+    """ASIC-dataflow DRAM bytes stay within 5× of (and never below 0.9×)
+    the analytical phi_layer DRAM model: the closed form amortises the PWP
+    bank perfectly, the sim refetches whatever the finite 128 KB buffer
+    cannot hold across stripes/passes (Fig. 7d behaviour), so the sim must
+    sit above the model but on the same order."""
+    from repro.core.assign import PhiStats
+    from repro.core.perfmodel import GemmShape, phi_layer
+
+    tr = vgg_traces[2]
+    r = PhiAcceleratorSim().run_layer(tr)
+    st = PhiStats(bit_density=tr.bit_density, l1_density=0.0,
+                  l2_pos_density=tr.l2_density, l2_neg_density=0.0,
+                  idx_density=tr.idx_density, rows=tr.m, cols=tr.k_dim)
+    lp = phi_layer(GemmShape(tr.m, tr.k_dim, tr.n), st, k=tr.k, q=tr.q,
+                   pwp_util=r.usage_fraction, timesteps=tr.reps, batch=1)
+    ratio = sum(r.dram_bytes.values()) / lp.dram_bytes
+    assert 0.9 <= ratio <= 5.0, ratio
+
+
+# ------------------------------------------------------------- acceptance ---
+def test_vgg16_table2_class_speedup_and_energy(vgg_traces):
+    """The repro acceptance: ≥ 2× modelled speedup AND ≥ 2× energy
+    efficiency over the Eyeriss-class baseline on the VGG-16 shapes."""
+    phi = summarize_run(PhiAcceleratorSim().run(vgg_traces))
+    eye = summarize_run(EyerissSim().run(vgg_traces))
+    speedup = eye["cycles"] / phi["cycles"]
+    eff = phi["gop_per_j"] / eye["gop_per_j"]
+    assert speedup >= 2.0, speedup
+    assert eff >= 2.0, eff
+
+
+def test_prefetcher_cuts_pwp_traffic(vgg_traces):
+    pf = PhiAcceleratorSim().run(vgg_traces)
+    nopf = PhiAcceleratorSim(PhiSimConfig(prefetch=False)).run(vgg_traces)
+    pwp = sum(r.dram_bytes.get("pwp", 0) for r in pf)
+    pwp_nopf = sum(r.dram_bytes.get("pwp", 0) for r in nopf)
+    assert pwp <= 0.5 * pwp_nopf
+
+
+def test_capture_snn_traces_feed_the_sim():
+    """End-to-end: real spiking-model capture -> LayerTrace -> simulator."""
+    import jax
+    import jax.numpy as jnp
+    from repro.snn import data as snn_data
+    from repro.snn import models as snn_models
+
+    cfg = snn_models.SNNConfig(kind="mlp", widths=(32, 32), input_size=8,
+                               timesteps=2)
+    params = snn_models.init(cfg, jax.random.PRNGKey(0))
+    x, _ = snn_data.synthetic_images(32, 10, size=8, seed=0)
+    phi, _ = snn_models.calibrate_model(params, cfg, jnp.asarray(x[:16]))
+    traces = snn_models.capture_phi_traces(params, cfg, phi,
+                                           jnp.asarray(x[:16]))
+    assert traces and all(t.m > 0 for t in traces)
+    for t in traces:
+        r = PhiAcceleratorSim().run_layer(t)
+        assert r.cycles > 0
+        assert r.l2_processed >= 0
+
+
+def test_capture_lm_phi_traces_feed_the_sim():
+    """End-to-end: calibrated phi-LM spike capture -> LayerTrace -> sim.
+    Exercises the f"{weight}#{occurrence}" walk mirroring calibrate_lm_phi
+    (stacked-layer sites use the pooled pattern bank)."""
+    import jax
+    from repro.configs import get_config, phi_variant
+    from repro.distributed.sharding import init_params
+    from repro.models import model
+
+    cfg = phi_variant(get_config("olmo_1b", smoke=True), timesteps=2, q=16)
+    params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(1))
+    batch = model.dummy_batch(cfg, 2, 8, with_labels=False,
+                              key=jax.random.PRNGKey(2))
+    params, _stats = model.calibrate_lm_phi(cfg, params, batch)
+    traces = model.capture_lm_phi_traces(cfg, params, batch)
+    assert traces, "no phi-LM GEMM sites captured"
+    assert all(t.name.startswith("lm.") and "#" in t.name for t in traces)
+    for t in traces:
+        assert (t.usage.sum(axis=1) == t.m).all()
+        r = PhiAcceleratorSim().run_layer(t)
+        assert r.cycles > 0 and r.energy_total_pj > 0
+
+
+# ------------------------------------------------------------ engine unit ---
+def test_engine_fifo_and_merge():
+    eng = Engine()
+    d1 = eng.submit("u", 0, 10, kind="a", count=1, energy_pj=2.0)
+    d2 = eng.submit("u", 5, 10, kind="a", count=1, energy_pj=2.0)
+    assert (d1, d2) == (10, 20)                  # FIFO structural hazard
+    rep = eng.report(static_w={"core": 1.0}, freq=hw.FREQ)
+    assert rep["cycles"] == 20
+    assert rep["energy_total_pj"] == pytest.approx(
+        sum(rep["energy_pj"].values()))
+    merged = merge_reports(rep, rep, reps=3)
+    assert merged["cycles"] == 60
+    assert merged["units"]["u"]["counters"]["a"] == 6
+    assert merged["energy_total_pj"] == pytest.approx(
+        3 * rep["energy_total_pj"])
+
+
+# ----------------------------------------------------- bench + CI gate -----
+def _run_gate(args, cwd):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks",
+                                      "check_regression.py"), *args],
+        capture_output=True, text=True, cwd=cwd)
+
+
+@pytest.mark.slow
+def test_sim_bench_matches_committed_baseline(tmp_path):
+    """benchmarks/sim_bench.py reproduces the committed BENCH_sim.json and
+    the regression gate passes on it — the determinism CI relies on."""
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks import sim_bench
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "BENCH_sim.json"
+    sim_bench.main(json_path=str(out))
+    current = json.loads(out.read_text())
+    baseline_path = os.path.join(REPO, "benchmarks", "baseline",
+                                 "BENCH_sim.json")
+    baseline = json.loads(open(baseline_path).read())
+    assert current == baseline
+    res = _run_gate(["--baseline", baseline_path, "--current", str(out)],
+                    tmp_path)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_sim_gate_fails_on_doctored_columns(tmp_path):
+    baseline_path = os.path.join(REPO, "benchmarks", "baseline",
+                                 "BENCH_sim.json")
+    base = json.loads(open(baseline_path).read())
+    for mutate, expect in (
+            (lambda d: d["sim"]["vgg16_phi"].__setitem__(
+                "cycles", int(d["sim"]["vgg16_phi"]["cycles"] * 2)),
+             "cycles"),
+            (lambda d: d["sim"]["vgg16_vs_eyeriss"].__setitem__(
+                "speedup", d["sim"]["vgg16_vs_eyeriss"]["speedup"] / 2),
+             "speedup"),
+            (lambda d: d["sim"]["crosscheck_fused"].__setitem__(
+                "rel_err", 0.5), "rel_err"),
+            (lambda d: d.__setitem__("schema", 99), "schema"),
+            (lambda d: d["sim"]["vgg16_prefetch"].__setitem__(
+                "pwp_traffic_frac",
+                d["sim"]["vgg16_prefetch"]["pwp_traffic_frac"] * 3),
+             "pwp_traffic_frac")):
+        doctored = copy.deepcopy(base)
+        mutate(doctored)
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(doctored))
+        res = _run_gate(["--baseline", baseline_path,
+                         "--current", str(cur)], tmp_path)
+        assert res.returncode == 1, (expect, res.stdout)
+        assert expect in res.stdout
+
+
+def test_sim_config_frozen_and_replaceable():
+    cfg = PhiSimConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.block_m = 1
+    assert dataclasses.replace(cfg, prefetch=False).prefetch is False
