@@ -237,12 +237,44 @@ def main(json_path: str | None = None) -> list[str]:
         rec(f"hbm_bytes_skew_prefetch_{tag}", bp.total,
             f"pwp_stream_x{bp.pwp_bytes / bf.pwp_bytes:.2f}_of_fused")
 
+    # ---- mesh-aware SPMD dispatch: shard_map body keeps the fused path ----
+    # The pre-PR-6 policy blanket-demoted every SPMD call to coo. Inside a
+    # shard_map body the operands are per-shard local arrays, so the policy
+    # re-gates on the local shape (spmd_local_* reasons). A one-device
+    # shard_map records the decision row; the HBM model quantifies the
+    # per-device win of an 8-way row-parallel shard of the bench shape.
+    from repro.compat import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    smesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    f_spmd = shard_map(lambda a_, w_: dispatch.phi_matmul(
+        a_, w_, pats, pwp, site="bench.spmd"),
+        mesh=smesh, in_specs=(P(), P()), out_specs=P(), check_vma=False)
+    t_spmd = _time(lambda: f_spmd(ab, w), reps=reps)
+    dsp = pol.last_decision("bench.spmd")
+    rec("spmd_shard_map_" + mode, t_spmd,
+        f"impl={dsp.impl}_reason={dsp.reason}", impl=dsp.impl,
+        reason=dsp.reason, shape=[bench_m, K, N], shards=dsp.shards)
+    from repro.core.perfmodel import phi_sharded_traffic
+    for tag, pwp_b in (("f32pwp", 4), ("int8pwp", 1)):
+        sh8 = phi_sharded_traffic(GemmShape(M, K, N), shards=8,
+                                  row_parallel=True, k=16, q=128,
+                                  pwp_bytes_per_el=pwp_b)
+        traffic[f"sharded8_{tag}"] = {
+            "fused": sh8["fused"].total, "fused_impl": sh8["fused_impl"],
+            "coo_demotion": sh8["coo"], "psum_bytes": sh8["psum_bytes"],
+            "ratio": sh8["coo"] / sh8["fused"].total}
+        rec(f"hbm_bytes_sharded8_{tag}", sh8["fused"].total,
+            f"{sh8['coo'] / sh8['fused'].total:.2f}"
+            "x_less_per_device_than_coo_demotion")
+
     if json_path:
         jax.effects_barrier()   # flush policy telemetry callbacks
         payload = {
-            "schema": 3,
+            "schema": 4,
             "backend": jax.default_backend(),
             "shape": {"m": M, "k": K, "n": N, "bench_m": bench_m},
+            "sharded_shape": {"m": M, "k": K, "n": N, "shards": 8,
+                              "row_parallel": True},
             "large_k_shape": {"m": Ml, "k": Kl, "n": Nl},
             "skew_shape": {"m": Mz, "k": Kz, "n": Nz, "q": qz,
                            "pwp_usage": round(usage_frac, 6),

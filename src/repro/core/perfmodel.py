@@ -332,6 +332,53 @@ def phi_coo_traffic(shape: GemmShape, *, k: int = 16, q: int = 128,
             + out_bytes)
 
 
+# --------------------------------------------- sharded (SPMD) HBM traffic ---
+def phi_sharded_traffic(shape: GemmShape, *, shards: int,
+                        row_parallel: bool = True, k: int = 16, q: int = 128,
+                        block_m: int = 256, block_n: int = 256,
+                        nnz_budget: float = 0.08, pwp_bytes_per_el: int = 4,
+                        w_bytes_per_el: int = 4,
+                        pwp_usage: float | None = None) -> dict:
+    """Per-device HBM bytes of one GEMM sharded ``shards``-ways, comparing
+    the mesh-aware dispatch (best fused lowering on the LOCAL shape) against
+    the old blanket coo demotion on the same local shape.
+
+    Row-parallel (Megatron-style ``k_ax``): each device owns K/shards of the
+    contraction — and with it T/shards K-partitions of the pattern bank and
+    PWPs — N replicates, and a psum over the (M, N) f32 out tile completes
+    the reduction. Column-parallel: K, the bank and the PWP rows replicate;
+    each device owns N/shards output columns. The psum cost is identical for
+    both lowerings (it happens outside the kernel), so it is reported
+    separately and included in neither total.
+
+    Returns {"local_shape": GemmShape, "fused_impl": str,
+    "fused": KernelTraffic, "coo": float, "psum_bytes": float}.
+    """
+    M, K, N = shape.m, shape.k, shape.n
+    if row_parallel:
+        assert K % (k * shards) == 0, (K, k, shards)
+        local = GemmShape(M, K // shards, N)
+    else:
+        assert N % shards == 0, (N, shards)
+        local = GemmShape(M, K, N // shards)
+    traffic = phi_kernel_traffic(local, k=k, q=q, block_m=block_m,
+                                 block_n=block_n, nnz_budget=nnz_budget,
+                                 pwp_bytes_per_el=pwp_bytes_per_el,
+                                 w_bytes_per_el=w_bytes_per_el,
+                                 pwp_usage=pwp_usage)
+    candidates = ["fused", "fused_stream"]
+    if pwp_usage is not None:
+        candidates.append("fused_prefetch")
+    impl = min(candidates, key=lambda c: traffic[c].total)
+    coo = phi_coo_traffic(local, k=k, q=q, nnz_budget=nnz_budget,
+                          pwp_bytes_per_el=pwp_bytes_per_el,
+                          w_bytes_per_el=w_bytes_per_el)
+    # ring all-reduce: each device sends+receives 2·(s−1)/s of the tile
+    psum = 2.0 * (shards - 1) / shards * M * N * 4 if row_parallel else 0.0
+    return {"local_shape": local, "fused_impl": impl,
+            "fused": traffic[impl], "coo": coo, "psum_bytes": psum}
+
+
 # --------------------------------------------------- packer budget report ---
 # The fused Pallas kernel is budget-free (it contracts the L2 residual
 # densely in VMEM) but emits per-M-block l2_nnz counters; the execution

@@ -134,7 +134,9 @@ def specs_to_sds(specs: Any) -> Any:
     )
 
 
-def _axis_size(mesh: Mesh, ax) -> int:
+def axis_size(mesh: Mesh, ax) -> int:
+    """Total extent of a PartitionSpec entry (mesh axis name, tuple of
+    names, or None) — the shard count of a dim partitioned over ``ax``."""
     if ax is None:
         return 1
     if isinstance(ax, tuple):
@@ -143,6 +145,9 @@ def _axis_size(mesh: Mesh, ax) -> int:
             out *= mesh.shape[a]
         return out
     return mesh.shape[ax]
+
+
+_axis_size = axis_size
 
 
 def shape_aware_spec(shape: tuple[int, ...], axes: tuple, mesh: Mesh,

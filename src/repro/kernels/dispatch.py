@@ -14,9 +14,22 @@ Resolution order (first match wins):
                                 override (fused/pallas) is demoted to "coo"
                                 inside an SPMD region, because honoring it
                                 there would fail to compile;
-  3. SPMD gate                — inside a ``pjit``/``shard_map`` region the
-                                Pallas kernels cannot be partitioned by the
-                                CPU SPMD pipeline → "coo" (pure XLA);
+  3. SPMD gate                — mesh-aware. Inside a *pjit-traced* SPMD
+                                region (explicit ``spmd_region`` annotation
+                                or an active logical-axis mesh, with no
+                                shard_map axis env) the Pallas kernels
+                                cannot be partitioned by the SPMD pipeline
+                                → "coo" (pure XLA). Inside a ``shard_map``
+                                *body*, however, every operand is already
+                                the per-shard local slice and a Pallas call
+                                runs unpartitioned on it — so the policy
+                                re-gates on the local (M, K_loc, N_loc)
+                                shape and keeps the fused lowerings
+                                (``spmd_local_*`` reasons, with the
+                                cooperating shard count recorded on the
+                                decision), demoting to "coo" only for
+                                transforms or shards whose local shape
+                                busts even the streaming VMEM budget;
   4. transform gate           — under autodiff or vmap tracing the Pallas
                                 kernels have no VJP/batching rule → "coo"
                                 (differentiable gather/scatter XLA path);
@@ -85,8 +98,19 @@ def _backend() -> str:
 
 
 # ----------------------------------------------------------- context probes ---
+_axis_probe_warned = False
+
+
 def _axis_env_nonempty() -> bool:
-    """True inside a shard_map/pmap body trace (named axes are in scope)."""
+    """True inside a shard_map/pmap body trace (named axes are in scope).
+
+    Both probes are private jax surface. When a jax release moves *both*,
+    the gate cannot see shard_map bodies any more: an SPMD region would be
+    treated as single-device and a Pallas lowering dispatched inside it
+    would fail to compile far from the cause — so the double failure is
+    loud (one-time warning), not silent.
+    """
+    global _axis_probe_warned
     try:
         from jax._src.core import get_axis_env
         return bool(get_axis_env().axis_sizes)
@@ -96,7 +120,31 @@ def _axis_env_nonempty() -> bool:
         from jax.core import nonempty_axis_env_DO_NOT_USE as _nonempty
         return bool(_nonempty())
     except Exception:  # noqa: BLE001
+        if not _axis_probe_warned:
+            _axis_probe_warned = True
+            log.warning(
+                "phi dispatch: both jax axis-env probes are broken on jax "
+                "%s — the SPMD gate cannot see shard_map/pmap bodies, so a "
+                "Pallas lowering may be dispatched inside one and fail to "
+                "compile far from here. Pin a jax that provides "
+                "jax._src.core.get_axis_env or update the probes in "
+                "kernels/dispatch.py.", jax.__version__)
         return False
+
+
+def _axis_env_shards() -> int | None:
+    """Device count cooperating in the innermost shard_map/pmap axis env
+    (the product of the named-axis sizes), or None when the size probe is
+    unavailable. Telemetry only — gating uses :func:`_axis_env_nonempty`."""
+    try:
+        from jax._src.core import get_axis_env
+        sizes = get_axis_env().axis_sizes
+    except Exception:  # noqa: BLE001
+        return None
+    out = 1
+    for s in dict(sizes).values():
+        out *= int(s)
+    return out
 
 
 @contextlib.contextmanager
@@ -176,6 +224,11 @@ class Decision:
     # ``stripe_active_sets`` pre-pass (one less read of the activations);
     # None = pre-pass (the fallback, and the telemetry's source).
     runtime_sets: Any = None
+    # SPMD-local resolution (shard_map body): the number of devices
+    # cooperating on this call — ``shape`` is each shard's LOCAL problem,
+    # so telemetry readers multiply by this to recover the global GEMM.
+    # None outside shard_map (or when the axis-size probe is unavailable).
+    shards: int | None = None
 
 
 class PhiExecutionPolicy:
@@ -193,6 +246,8 @@ class PhiExecutionPolicy:
         # (site, impl, reason) -> trace count. Decisions happen at trace
         # time, so under jit caching the counts reflect traces, not steps.
         self._decisions: dict[tuple[str, str, str], int] = {}
+        # site -> most recent full Decision (incl. local shape + shards).
+        self._last: dict[str, Decision] = {}
         # site -> runtime counters fed by the fused kernel's l2_nnz output.
         self._sites: dict[str, dict] = {}
         # site -> (T, q+1) calibration pattern-usage histogram. Registered
@@ -216,6 +271,12 @@ class PhiExecutionPolicy:
     def usage_for(self, site: str) -> np.ndarray | None:
         with self._lock:
             return self._usage.get(site)
+
+    def runtime_shards_for(self, site: str) -> int:
+        """Mesh extent recorded for ``site``'s runtime counters (1 when the
+        site has only executed outside shard_map, or not at all)."""
+        with self._lock:
+            return int(self._sites.get(site, {}).get("shards", 1))
 
     def runtime_usage_for(self, site: str) -> np.ndarray | None:
         """The site's aggregated *runtime* match histogram ((T, q+1) int64),
@@ -253,6 +314,14 @@ class PhiExecutionPolicy:
         shape = (m, k_dim, n, t, q)
         spmd = in_spmd_region()
         transform = transform or in_autodiff_region()
+        # A shard_map body traces with *local* per-shard operands: a Pallas
+        # call there runs unpartitioned on each shard's slice, so the fused
+        # lowerings are executable and (m, k_dim, n, t) already ARE the
+        # local shape to gate on. A pjit-traced region (explicit annotation
+        # or mesh context, no axis env) sees global operands that XLA would
+        # have to partition through the pallas_call — not supported → coo.
+        spmd_local = spmd and not transform and _axis_env_nonempty()
+        shards = _axis_env_shards() if spmd_local else None
         if usage is None:
             usage = self.usage_for(site)
         active_sets, usage_ratio = (active_pattern_sets(usage)
@@ -266,15 +335,18 @@ class PhiExecutionPolicy:
         mode = "native" if backend == "tpu" else "interpret"
         if ov is not None:
             # Overrides are honored only where they can actually execute: a
-            # Pallas-based choice inside an SPMD region or a differentiated/
-            # vmapped trace silently forces a failed compile — demote. A
-            # "fused" choice whose smallest block config busts VMEM streams
-            # its K axis instead (same fused dataflow, group-resident), and
-            # only falls to "coo" when even streaming doesn't fit. A
-            # "fused_prefetch" choice needs a skewed usage histogram to size
-            # its gather buffer — without one it runs the closest executable
-            # fused lowering instead.
-            if spmd and ov in _PALLAS_IMPLS:
+            # Pallas-based choice inside a pjit-traced SPMD region or a
+            # differentiated/vmapped trace silently forces a failed compile
+            # — demote. Inside a shard_map *body* (``spmd_local``) the
+            # kernels run on the local shards, so the override goes through
+            # the same VMEM gating as anywhere else. A "fused" choice whose
+            # smallest block config busts VMEM streams its K axis instead
+            # (same fused dataflow, group-resident), and only falls to
+            # "coo" when even streaming doesn't fit. A "fused_prefetch"
+            # choice needs a skewed usage histogram to size its gather
+            # buffer — without one it runs the closest executable fused
+            # lowering instead.
+            if spmd and not spmd_local and ov in _PALLAS_IMPLS:
                 d = Decision("coo", f"spmd_region_demotes_{ov}", site, shape,
                              backend)
             elif transform and ov in _PALLAS_IMPLS:
@@ -311,8 +383,34 @@ class PhiExecutionPolicy:
                                  backend)    # shape: still executable
             else:
                 d = Decision(ov, f"{which}_override", site, shape, backend)
-        elif spmd:
+        elif spmd and not spmd_local:
             d = Decision("coo", "spmd_region", site, shape, backend)
+        elif spmd:
+            # Mesh-aware SPMD resolution: re-gate on the per-shard local
+            # shape and keep the fused dataflow wherever it fits; "coo"
+            # only where even K-streaming busts the VMEM budget, or where
+            # the launch-cost crossover says the local GEMM is too tiny.
+            gate = ops.fused_shape_viable(m, k_dim, n, t, q,
+                                          p_active=p_active)
+            if gate != "coo" and backend == "tpu" and \
+                    ops.launch_cost_prefers_coo(
+                        m, k_dim, n, t, q,
+                        pwp_usage=(usage_ratio if p_active else None)):
+                d = Decision("coo", "spmd_local_launch_cost", site, shape,
+                             backend)
+            elif gate == "coo":
+                d = Decision("coo", "spmd_local_vmem_gate", site, shape,
+                             backend)
+            elif gate == "fused_prefetch":
+                d = Decision("fused_prefetch",
+                             f"spmd_local_prefetch_{mode}", site, shape,
+                             backend)
+            elif gate == "fused_stream":
+                d = Decision("fused_stream", f"spmd_local_k_stream_{mode}",
+                             site, shape, backend)
+            else:
+                d = Decision("fused", f"spmd_local_fused_{mode}", site,
+                             shape, backend)
         elif transform:
             d = Decision("coo", "autodiff_or_vmap", site, shape, backend)
         else:
@@ -364,6 +462,11 @@ class PhiExecutionPolicy:
                 d = dataclasses.replace(
                     d, runtime_sets=top_p_sets(rt_hist, d.p_active),
                     reason=d.reason + "_runtime_sets")
+        if shards is not None:
+            # per-shard telemetry: ``shape`` is the local problem; every
+            # decision resolved inside the shard_map body carries the
+            # cooperating device count (overrides included).
+            d = dataclasses.replace(d, shards=shards)
         self._record_decision(d)
         return d
 
@@ -372,6 +475,7 @@ class PhiExecutionPolicy:
         with self._lock:
             first = key not in self._decisions
             self._decisions[key] = self._decisions.get(key, 0) + 1
+            self._last[d.site] = d
         if first:
             log.info("phi dispatch: %s -> %s (%s, M=%d K=%d N=%d)",
                      d.site, d.impl, d.reason, *d.shape[:3])
@@ -445,32 +549,37 @@ class PhiExecutionPolicy:
                                             block_m=bm, block_n=bn,
                                             group_t=group_t)
         if self.telemetry:
+            # Inside a shard_map body the callback fires once per shard
+            # with that shard's local counters — so ``executions``/``rows``
+            # aggregate per-shard work and ``shards`` labels the site.
             from jax.experimental import io_callback
             bm_eff = ops.effective_block_m(M, bm)
             if hist is not None:
                 io_callback(lambda v, h, s=site, b=bm_eff, k=K, r=M,
-                            g=group_t, u=d.usage_ratio:
+                            g=group_t, u=d.usage_ratio, sh=d.shards:
                             self._record_nnz(s, b, k, r, v, group_t=g,
-                                             usage_ratio=u, match_hist=h),
+                                             usage_ratio=u, match_hist=h,
+                                             shards=sh),
                             None, nnz, hist, ordered=False)
             else:
                 io_callback(lambda v, s=site, b=bm_eff, k=K, r=M, g=group_t,
-                            u=d.usage_ratio:
+                            u=d.usage_ratio, sh=d.shards:
                             self._record_nnz(s, b, k, r, v, group_t=g,
-                                             usage_ratio=u),
+                                             usage_ratio=u, shards=sh),
                             None, nnz, ordered=False)
         return out
 
     def _record_nnz(self, site: str, block_m: int, k_dim: int, rows: int,
                     nnz, group_t: int = 0,
                     usage_ratio: float | None = None,
-                    match_hist=None) -> None:
+                    match_hist=None, shards: int | None = None) -> None:
         nnz = np.asarray(nnz)
         with self._lock:
             c = self._sites.setdefault(site, {
                 "executions": 0, "rows": 0, "l2_nnz_total": 0,
                 "l2_nnz_max_block": 0, "block_m": block_m, "k_dim": k_dim,
                 "group_t": group_t, "usage_ratio": usage_ratio,
+                "shards": shards or 1,
             })
             c["executions"] += 1
             c["rows"] += rows
@@ -479,6 +588,11 @@ class PhiExecutionPolicy:
                                         int(nnz.max(initial=0)))
             c["block_m"], c["k_dim"], c["group_t"] = block_m, k_dim, group_t
             c["usage_ratio"] = usage_ratio
+            if shards:
+                # per-shard telemetry: executions/rows/l2_nnz above count
+                # each shard's callback separately; this labels the site
+                # with the mesh extent they came from.
+                c["shards"] = shards
             if match_hist is not None:
                 # runtime match telemetry: per-site (T, q+1) histogram of
                 # actual pattern references, streamed by the prefetch
@@ -494,6 +608,12 @@ class PhiExecutionPolicy:
     def decisions(self) -> dict[tuple[str, str, str], int]:
         with self._lock:
             return dict(self._decisions)
+
+    def last_decision(self, site: str) -> Decision | None:
+        """The most recent Decision resolved for ``site`` — carries the
+        local problem shape and, inside shard_map, the shard count."""
+        with self._lock:
+            return self._last.get(site)
 
     def report(self) -> dict:
         """Dispatch counts + the perfmodel packer-budget view of the
@@ -520,8 +640,33 @@ class PhiExecutionPolicy:
     def reset(self) -> None:
         with self._lock:
             self._decisions.clear()
+            self._last.clear()
             self._sites.clear()
             self._usage.clear()
+
+
+# ------------------------------------------------------ per-shard usage ------
+def shard_usage_histogram(usage, shards: int):
+    """Per-shard view of a (T, q+1) pattern-usage histogram for a call whose
+    K axis is split ``shards``-ways under shard_map (row-parallel).
+
+    The pattern bank's T row-partitions split with K — shard ``i`` owns
+    histogram rows ``[i·T/shards, (i+1)·T/shards)``. The shard_map body is
+    traced ONCE for all shards, so the policy can be handed only a single
+    concrete histogram: the element-wise max over the shard slices. A
+    pattern hot in ANY shard then stays inside the prefetch gather-buffer
+    sizing, which keeps the one traced decision valid for every shard
+    (exactness never depends on the set choice — only the streamed-bytes
+    win does). Column-parallel calls replicate the bank: pass ``shards=1``
+    (identity). Returns None when T does not divide (the divisibility
+    fallback replicated the weight instead, so there is no local slice)."""
+    if usage is None or shards <= 1:
+        return usage
+    u = np.asarray(usage)
+    t = u.shape[0]
+    if t % shards:
+        return None
+    return u.reshape(shards, t // shards, u.shape[1]).max(axis=0)
 
 
 # ---------------------------------------------------------- default policy ---

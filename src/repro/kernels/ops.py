@@ -5,7 +5,10 @@ Responsibilities:
   * backend dispatch — Pallas TPU kernels run natively on TPU, in
     ``interpret=True`` mode on CPU (correctness validation), and the pure-XLA
     reference path (`ref.py`) is used inside pjit-lowered distributed graphs
-    (Pallas cannot be partitioned/compiled by the CPU SPMD pipeline);
+    (XLA cannot auto-partition through a ``pallas_call``). Inside a
+    shard_map *body* the operands are already per-shard local arrays, so
+    the Pallas kernels run there unchanged — ``kernels.dispatch`` re-gates
+    on the local shape (``spmd_local_*``) instead of demoting;
   * COO bucketing for the L2 spmm (the static analogue of the ASIC packer);
   * the composite ``phi_matmul`` = matcher → L1 gather → L2 spmm.
 """

@@ -57,6 +57,12 @@ Three variants share the per-partition body (``_partition_body``):
     pattern is *not* in their stripe's active set fall through to the L2
     residual, so the restriction changes the decomposition, never the
     product.
+
+All variants are shard_map-invocable: a shard_map body hands them plain
+per-shard local operands, so no partitioning rule is needed (callers pass
+``check_vma=False`` — pallas_call has no replication rule) and the
+execution policy keeps the fused dataflow under SPMD serving by re-gating
+on the local shape.
 """
 from __future__ import annotations
 

@@ -3,24 +3,47 @@ params, and drive the continuous-batching engine over a synthetic request
 stream, reporting throughput/latency/slot-utilisation.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1p5_4b --smoke \
-        --requests 16 --slots 4 [--phi] [--ckpt-dir DIR]
+        --requests 16 --slots 4 [--phi] [--ckpt-dir DIR] \
+        [--host-devices 8 --mesh-model 4]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
 import time
 
-import jax
-import numpy as np
 
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_config, phi_variant
-from repro.distributed.sharding import init_params
-from repro.kernels import dispatch
-from repro.models import model
-from repro.serve.engine import Engine, Request
-from repro.utils import log
+def _early_host_devices() -> None:
+    """--host-devices N forces N virtual CPU devices; the XLA flag must be
+    set before jax initialises its backends, i.e. before the import below."""
+    for i, a in enumerate(sys.argv):
+        if a == "--host-devices" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif a.startswith("--host-devices="):
+            n = a.split("=", 1)[1]
+        else:
+            continue
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = ((flags + " ") if flags else "") + \
+            f"--xla_force_host_platform_device_count={int(n)}"
+        return
+
+
+_early_host_devices()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import CheckpointManager  # noqa: E402
+from repro.configs import get_config, phi_variant  # noqa: E402
+from repro.distributed.sharding import init_params  # noqa: E402
+from repro.kernels import dispatch  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.models import model  # noqa: E402
+from repro.serve.engine import Engine, Request  # noqa: E402
+from repro.utils import log  # noqa: E402
 
 
 def main() -> None:
@@ -37,6 +60,13 @@ def main() -> None:
     ap.add_argument("--max-context", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N virtual CPU devices for off-TPU mesh "
+                         "testing (consumed before jax init)")
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="model-parallel ways: builds a (data, model) mesh "
+                         "over the visible devices and serves the phi GEMMs "
+                         "through shard_map (0 = single device)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -70,8 +100,17 @@ def main() -> None:
             cfg.phi, nnz_budget=min(0.9, 2 * maxd + 0.05)))
         log.info("phi calibrated (max L2 density %.3f)", maxd)
 
+    mesh = None
+    if args.mesh_model > 1:
+        nd = len(jax.devices())
+        if nd % args.mesh_model:
+            raise SystemExit(f"--mesh-model {args.mesh_model} does not divide "
+                             f"{nd} devices (try --host-devices)")
+        mesh = make_mesh((nd // args.mesh_model, args.mesh_model),
+                         ("data", "model"))
+        log.info("serving on %s", dict(mesh.shape))
     eng = Engine(cfg, params, batch_slots=args.slots,
-                 max_context=args.max_context)
+                 max_context=args.max_context, mesh=mesh)
     rng = np.random.default_rng(0)
     t_sub = time.time()
     for rid in range(args.requests):

@@ -171,13 +171,18 @@ def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=N
 
     Which kernel lowering runs is NOT decided here: every path hands the
     call to ``kernels.dispatch`` and the execution policy resolves the impl
-    from context — fused on a single device, the pjit-safe XLA path inside
-    the shard_map body, an explicit ``cfg.phi.impl`` override everywhere
-    it is safe.
+    from context — fused on a single device, mesh-aware re-gating on the
+    local per-shard shape inside the shard_map body (``spmd_local_*``
+    reasons), an explicit ``cfg.phi.impl`` override everywhere it is safe.
+    The site's calibration usage histogram is sliced along the K-partition
+    axis before tracing (``dispatch.shard_usage_histogram``): under
+    row-parallel ``k_ax`` each shard owns T/nk of the T K-partitions, so
+    the policy gates on the max over shard slices; under column-parallel
+    the bank replicates and the histogram passes through whole.
     """
     from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import current_mesh, resolve_spec
+    from repro.distributed.sharding import axis_size, current_mesh, resolve_spec
 
     override = cfg.phi.impl if cfg.phi is not None else None
     mesh = current_mesh()
@@ -194,11 +199,7 @@ def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=N
         ax = p[0] if len(p) else None
         if ax is None:
             return None
-        names = ax if isinstance(ax, tuple) else (ax,)
-        size = 1
-        for nme in names:
-            size *= mesh.shape[nme]
-        return ax if dim % size == 0 else None  # divisibility fallback
+        return ax if dim % axis_size(mesh, ax) == 0 else None  # divisibility fallback
 
     k_ax = _ax(axes[0], w.shape[0])
     n_ax = _ax(axes[1], w.shape[1])
@@ -218,16 +219,26 @@ def _phi_sharded_matmul(cfg, spikes, w, patterns, pwp, name, budget, pwp_scale=N
     # spikes = (T, B, …, K): timestep leads, batch is dim 1.
     mid = (None,) * (spikes.ndim - 3)
 
+    # Per-shard usage view for the mesh-aware gate: the body is traced once
+    # for all shards, so slice the calibration histogram down to the local
+    # T/nk K-partitions (max over shard slices — conservative, and exactness
+    # never depends on the set choice: out-of-set matches fall through to
+    # the L2 correction).
+    nk = axis_size(mesh, k_ax)
+    usage = dispatch.shard_usage_histogram(
+        dispatch.get_policy().usage_for(f"lm.{name}"), nk)
+
     def body(s_loc, w_loc, pats_loc, pwp_loc, scale_loc):
         flat = s_loc.reshape(-1, s_loc.shape[-1])
-        # The policy sees the shard_map axis env and resolves the SPMD-safe
-        # lowering (demoting a Pallas-based override if one is set).
+        # The policy sees the shard_map axis env and re-gates on the local
+        # per-shard problem (Pallas lowerings when viable, coo otherwise).
         out = dispatch.phi_matmul(flat, w_loc, pats_loc, pwp_loc,
                                   site=f"lm.{name}.spmd",
                                   config_override=override,
                                   nnz_budget=budget,
                                   gather_dtype=cfg.compute_dtype,
-                                  pwp_scale=scale_loc)
+                                  pwp_scale=scale_loc,
+                                  usage=usage)
         if k_ax is not None:
             out = jax.lax.psum(out, k_ax)
         return out.reshape(s_loc.shape[:-1] + (w_loc.shape[-1],))
@@ -493,6 +504,26 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict):
     """Returns (last-position logits (B, V), decode state)."""
     x, caches = _forward(cfg, params, batch, want_cache=True)
     logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def prefill_padded(cfg: ModelConfig, params: dict, batch: dict,
+                   last_pos: jax.Array):
+    """Prefill a right-padded prompt batch, reading logits at the TRUE last
+    token ``last_pos`` ((B,) int32, 0-based) instead of the padded end.
+
+    Right-padding is exact only under causal *full* attention: rows at
+    positions < true length never attend to the pad tail, and decode later
+    masks (then progressively overwrites) the junk cache slots past
+    ``last_pos``. Ring/windowed caches (swa / chunked) and recurrent state
+    (ssm / hybrid) fold the pad tokens into state — callers must gate on
+    family/attn_type (the serve engine's prompt bucketing does).
+    """
+    x, caches = _forward(cfg, params, batch, want_cache=True)
+    idx = last_pos.astype(jnp.int32)[:, None, None]
+    sel = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    logits = _logits(cfg, params, sel)
     return logits[:, 0], caches
 
 

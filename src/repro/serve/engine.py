@@ -11,14 +11,24 @@ tree. Per tick:
 
 SWA/chunked archs use ring caches, so slot memory is O(window), not O(ctx).
 
+Prompt bucketing: admissions pad the prompt to the next power-of-two length
+(capped at ``max_context``) and read the logits at the true last position,
+so warm traffic with mixed prompt lengths reuses a handful of prefill jit
+entries instead of compiling one per distinct length. Right-padding is only
+exact for causal full attention — ring caches (swa/chunked) and recurrent
+state (ssm/hybrid) fold pad tokens into state, so those archs prefill at
+the raw length.
+
 Phi mode: the engine never names a kernel impl — every spiking GEMM inside
 prefill/decode routes through the ``kernels.dispatch`` execution policy
-(fused single-pass on this single-device path unless ``cfg.phi.impl``
-overrides it). ``phi_report()`` exposes the policy's dispatch decisions and
+(fused single-pass on a single device; mesh-aware ``spmd_local_*``
+re-gating inside the shard_map bodies when the engine is given a device
+``mesh``). ``phi_report()`` exposes the policy's dispatch decisions and
 the aggregated l2_nnz packer budgets for the served traffic.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any
@@ -47,9 +57,18 @@ class Result:
     prompt_len: int
 
 
+def bucket_len(plen: int, cap: int) -> int:
+    """Next power-of-two >= ``plen``, capped at ``cap`` (>= ``plen``)."""
+    b = 1
+    while b < plen:
+        b *= 2
+    return min(b, cap) if cap >= plen else plen
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
-                 max_context: int = 512, eos_id: int = 2, seed: int = 0):
+                 max_context: int = 512, eos_id: int = 2, seed: int = 0,
+                 mesh=None):
         assert cfg.frontend == "none", "engine serves token-in token-out archs"
         self.cfg = cfg
         self.params = params
@@ -57,6 +76,11 @@ class Engine:
         self.max_context = max_context
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        self.mesh = mesh
+        # Right-padding is exact only for causal full attention (see module
+        # docstring); other archs keep raw-length prefill.
+        self.bucketed = (cfg.family not in ("ssm", "hybrid")
+                         and getattr(cfg, "attn_type", "full") == "full")
 
         self.state = model.init_decode_state(cfg, batch_slots, max_context)
         self.pos = np.zeros(batch_slots, np.int64)
@@ -71,7 +95,17 @@ class Engine:
 
         self._decode = jax.jit(partial(model.decode_step, cfg))
         self._prefill = jax.jit(partial(model.prefill, cfg))
+        self._prefill_padded = jax.jit(partial(model.prefill_padded, cfg))
         self._insert = jax.jit(self._insert_impl)
+
+    def _ctx(self):
+        """Mesh context for traced calls: under a mesh the sharding rules
+        route the phi GEMMs through ``_phi_sharded_matmul``'s shard_map and
+        the dispatch policy re-gates on the per-shard shape."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distributed.sharding import SERVE_RULES, use_rules
+        return use_rules(SERVE_RULES, self.mesh)
 
     # ------------------------------------------------------------- plumbing
     @staticmethod
@@ -93,7 +127,18 @@ class Engine:
                 continue
             req = self.queue.pop(0)
             prompt = np.asarray(req.tokens, np.int32)[None, :]
-            logits, new_state = self._prefill(self.params, {"tokens": jnp.asarray(prompt)})
+            plen = prompt.shape[1]
+            with self._ctx():
+                if self.bucketed:
+                    bl = bucket_len(plen, self.max_context)
+                    padded = np.zeros((1, bl), np.int32)
+                    padded[0, :plen] = prompt[0]
+                    logits, new_state = self._prefill_padded(
+                        self.params, {"tokens": jnp.asarray(padded)},
+                        jnp.full((1,), plen - 1, jnp.int32))
+                else:
+                    logits, new_state = self._prefill(
+                        self.params, {"tokens": jnp.asarray(prompt)})
             new_state = model.extend_caches(self.cfg, new_state, self.max_context)
             self.state = self._insert(self.state, new_state, jnp.int32(slot))
             self.key, sk = jax.random.split(self.key)
@@ -124,10 +169,15 @@ class Engine:
         last = np.array([self.out_tokens[b][-1] if self.active[b] else 0
                          for b in range(self.B)], np.int32)
         pos = jnp.asarray(self.pos.astype(np.int32))
-        logits, self.state = self._decode(self.params, jnp.asarray(last), pos, self.state)
+        with self._ctx():
+            logits, self.state = self._decode(self.params, jnp.asarray(last),
+                                              pos, self.state)
         self.key, sk = jax.random.split(self.key)
-        temp = max((r.temperature for r in self.slot_req if r), default=0.0)
-        nxt = np.asarray(sample(logits, sk, temperature=temp))
+        # Per-slot temperatures: a sampled request batched next to a greedy
+        # one must not perturb the greedy stream.
+        temps = np.array([r.temperature if r is not None else 0.0
+                          for r in self.slot_req], np.float32)
+        nxt = np.asarray(sample(logits, sk, temperature=temps))
         for b in range(self.B):
             if self.active[b]:
                 self.out_tokens[b].append(int(nxt[b]))

@@ -1,16 +1,34 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k, shared or per-slot."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 0.0,
+def sample(logits: jax.Array, key: jax.Array, *,
+           temperature: float | jax.Array | np.ndarray = 0.0,
            top_k: int = 0) -> jax.Array:
-    """logits (B, V) -> tokens (B,) int32."""
+    """logits (B, V) -> tokens (B,) int32.
+
+    ``temperature`` is either a Python scalar shared by the whole batch or a
+    (B,) array of per-slot temperatures. Slots with temperature <= 0 decode
+    greedily (argmax) and are unaffected by the other slots' temperatures —
+    batching a sampled request next to a greedy one must not perturb the
+    greedy stream.
+    """
+    if isinstance(temperature, (jax.Array, np.ndarray)):
+        temps = jnp.asarray(temperature, logits.dtype)
+        greedy = logits.argmax(-1).astype(jnp.int32)
+        scaled = logits / jnp.where(temps > 0.0, temps, 1.0)[:, None]
+        sampled = _draw(scaled, key, top_k)
+        return jnp.where(temps > 0.0, sampled, greedy)
     if temperature <= 0.0:
         return logits.argmax(-1).astype(jnp.int32)
-    logits = logits / temperature
+    return _draw(logits / temperature, key, top_k)
+
+
+def _draw(logits: jax.Array, key: jax.Array, top_k: int) -> jax.Array:
     if top_k:
         vals, idx = jax.lax.top_k(logits, top_k)
         draw = jax.random.categorical(key, vals)

@@ -61,7 +61,10 @@ def test_single_device_default_is_fused(small_phi):
     assert budgets["t.single"].nnz_budget_required > 0
 
 
-def test_shard_map_trace_resolves_coo(small_phi):
+def test_shard_map_body_resolves_local_fused(small_phi):
+    """Inside a shard_map body the operands are per-shard local arrays, so
+    the policy re-gates on the local shape and keeps the fused lowering
+    (``spmd_local_*`` reason) instead of blanket-demoting to coo."""
     from repro.compat import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
@@ -76,7 +79,32 @@ def test_shard_map_trace_resolves_coo(small_phi):
     ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-4, atol=1e-3)
-    assert ("t.shmap", "coo", "spmd_region") in pol.decisions()
+    dec = pol.decisions()
+    assert any(s == "t.shmap" and i in ("fused", "fused_stream", "fused_prefetch")
+               and r.startswith("spmd_local_") for (s, i, r) in dec), dec
+    last = pol.last_decision("t.shmap")
+    assert last is not None and last.shards == 1, last
+
+
+def test_shard_map_body_honors_pallas_override(small_phi):
+    """An explicit Pallas-impl override is honored inside the shard_map body
+    (local operands — the old blanket demotion no longer applies there)."""
+    from repro.compat import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    a, w, pats, pwp = small_phi
+    pol = dispatch.get_policy()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    f = shard_map(lambda a_, w_: dispatch.phi_matmul(
+                      a_, w_, pats, pwp, site="t.shmap_ov",
+                      config_override="fused_stream"),
+                  mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                  check_vma=False)
+    out = f(a, w)
+    ref = ops.phi_matmul(a, w, pats, pwp, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    assert ("t.shmap_ov", "fused_stream", "config_override") in pol.decisions()
 
 
 def test_mesh_context_and_explicit_region_resolve_coo(small_phi):
@@ -95,6 +123,45 @@ def test_mesh_context_and_explicit_region_resolve_coo(small_phi):
     dec = pol.decisions()
     assert ("t.mesh", "coo", "spmd_region") in dec
     assert ("t.region", "coo", "spmd_region") in dec
+
+
+def test_axis_env_probe_pinned_jax_contract():
+    """Version-pins the private-jax surface the SPMD gate stands on: probe 1
+    (``jax._src.core.get_axis_env``) must exist and report an empty axis env
+    outside any shard_map/pmap, without tripping the broken-probe warning.
+    If a jax upgrade moves the symbol, THIS test fails in CI instead of the
+    gate silently vanishing at user trace time."""
+    from jax._src.core import get_axis_env
+
+    assert hasattr(get_axis_env(), "axis_sizes")
+    assert not get_axis_env().axis_sizes
+    assert dispatch._axis_env_nonempty() is False
+    assert dispatch._axis_env_shards() == 1
+    assert not dispatch._axis_probe_warned
+
+
+def test_axis_env_probe_double_failure_warns_once(monkeypatch, caplog):
+    """When BOTH private-jax probes break, the gate must fall back loudly:
+    one warning naming the consequence, not a silent False."""
+    import logging
+
+    import jax._src.core as jcore
+
+    def boom(*a, **k):
+        raise AttributeError("moved in this jax")
+
+    monkeypatch.setattr(jcore, "get_axis_env", boom)
+    monkeypatch.setattr(jax.core, "nonempty_axis_env_DO_NOT_USE", boom,
+                        raising=False)
+    monkeypatch.setattr(dispatch, "_axis_probe_warned", False)
+    with caplog.at_level(logging.WARNING, logger="repro"):
+        assert dispatch._axis_env_nonempty() is False
+        assert dispatch._axis_env_nonempty() is False
+    warns = [r for r in caplog.records if "axis-env probes" in r.getMessage()]
+    assert len(warns) == 1, [r.getMessage() for r in caplog.records]
+    assert dispatch._axis_probe_warned
+    # telemetry probe degrades to None, never raises
+    assert dispatch._axis_env_shards() is None
 
 
 def test_autodiff_and_vmap_resolve_coo(small_phi):

@@ -140,6 +140,73 @@ def test_checkpoint_elastic_reshard():
     """)
 
 
+def test_phi_lm_sharded_decode_bit_identical_and_fused():
+    """Mesh-aware dispatch acceptance: on an 8-device (2 data × 4 model)
+    mesh, phi-LM decode logits under the policy (which resolves fused
+    lowerings INSIDE the shard_map bodies — asserted via decisions) are
+    BIT-identical to forced-coo under the dyadic 2^-10 weight grid, for
+    both the column-parallel w1 site and the row-parallel psum w2 site."""
+    run_devices("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_config, phi_variant
+        from repro.distributed import sharding as shd
+        from repro.kernels import dispatch
+        from repro.launch.mesh import make_mesh
+        from repro.models import model
+
+        cfg = phi_variant(get_config('olmo_1b', smoke=True), timesteps=2, q=16)
+        params = shd.init_params(model.lm_specs(cfg), jax.random.PRNGKey(1))
+        params = jax.tree.map(lambda x: jnp.round(x * 1024) / 1024, params)
+        batch = model.dummy_batch(cfg, 2, 8, with_labels=False,
+                                  key=jax.random.PRNGKey(2))
+        params, stats = model.calibrate_lm_phi(cfg, params, batch)
+        maxd = max(s.l2_density for s in stats.values())
+        cfg = cfg.with_(phi=dataclasses.replace(
+            cfg.phi, nnz_budget=min(0.9, 2 * maxd + 0.05)))
+
+        mesh = make_mesh((2, 4), ('data', 'model'))
+
+        def decode_run(c, steps=2):
+            with shd.use_rules(shd.SERVE_RULES, mesh):
+                logits, caches = model.prefill(c, params, batch)
+                caches = model.extend_caches(c, caches, 8 + steps + 1)
+                outs = [np.asarray(logits)]
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                for t in range(steps):
+                    pos = jnp.full((2,), 8 + t, jnp.int32)
+                    logits, caches = model.decode_step(c, params, tok, pos,
+                                                       caches)
+                    outs.append(np.asarray(logits))
+                    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            return outs
+
+        pol = dispatch.get_policy()
+        out_pol = decode_run(cfg)
+        out_coo = decode_run(cfg.with_(phi=dataclasses.replace(cfg.phi,
+                                                               impl='coo')))
+        for got, want in zip(out_pol, out_coo):
+            assert np.array_equal(got, want), \\
+                f'sharded decode logits differ by {np.abs(got - want).max()}'
+
+        dec = pol.decisions()
+        fused_spmd = {s for (s, i, r) in dec
+                      if i in ('fused', 'fused_stream', 'fused_prefetch')
+                      and r.startswith('spmd_local_')}
+        # column-parallel (w1: N on 'model') AND row-parallel psum
+        # (w2: K on 'model') both kept the fused dataflow in-body
+        assert 'lm.w1.spmd' in fused_spmd, dec
+        assert 'lm.w2.spmd' in fused_spmd, dec
+        # forced-coo run: the config override was honored inside the body
+        assert any(s == 'lm.w2.spmd' and i == 'coo' and r == 'config_override'
+                   for (s, i, r) in dec), dec
+        # per-shard telemetry: the decision carries the mesh extent
+        last = pol.last_decision('lm.w1.spmd')
+        assert last is not None and last.shards == 8, last
+        print('sharded phi decode parity OK:', sorted(fused_spmd))
+    """)
+
+
 def test_multipod_mesh_constructs():
     run_devices("""
         from repro.launch.mesh import make_production_mesh

@@ -176,3 +176,41 @@ def test_engine_continuous_batching_matches_sequential_decode():
                                            pos, caches)
             toks.append(int(lg.argmax(-1)[0]))
         assert results[rid].tokens == toks, (rid, results[rid].tokens, toks)
+
+
+def test_engine_mixed_temperature_keeps_greedy_slots_deterministic():
+    """Regression: tick() used one shared max(...) temperature, so batching
+    a sampled request next to a greedy one silently sampled the greedy slot
+    too. Greedy output must be identical with and without the hot neighbor."""
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(0))
+    greedy_prompt = np.arange(3, 9, dtype=np.int32)
+
+    solo = Engine(cfg, params, batch_slots=2, max_context=64, eos_id=-1)
+    solo.submit(Request(rid=0, tokens=greedy_prompt, max_new_tokens=8))
+    want = {r.rid: r.tokens for r in solo.run()}[0]
+
+    mixed = Engine(cfg, params, batch_slots=2, max_context=64, eos_id=-1)
+    mixed.submit(Request(rid=0, tokens=greedy_prompt, max_new_tokens=8))
+    mixed.submit(Request(rid=1, tokens=np.arange(20, 24, dtype=np.int32),
+                         max_new_tokens=8, temperature=0.8))
+    res = {r.rid: r for r in mixed.run()}
+    assert len(res) == 2 and len(res[1].tokens) == 8
+    assert res[0].tokens == want, (res[0].tokens, want)
+
+
+def test_engine_prefill_bucketing_hits_jit_cache():
+    """Admissions pad prompts to power-of-two buckets: six distinct prompt
+    lengths over two buckets must compile the prefill exactly twice."""
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_slots=2, max_context=64, eos_id=-1)
+    assert eng.bucketed  # full causal attention → right-padding is exact
+    lens = [5, 6, 7, 3, 4, 8]            # buckets: 8 8 8 4 4 8
+    for i, n in enumerate(lens):
+        eng.submit(Request(rid=i, tokens=np.arange(n, dtype=np.int32) + 3,
+                           max_new_tokens=2))
+    results = eng.run()
+    assert len(results) == len(lens)
+    assert eng._prefill_padded._cache_size() == 2, \
+        eng._prefill_padded._cache_size()
