@@ -39,11 +39,13 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "baseline", "BENCH_kernels.json")
-# Columns where LARGER is better — exactly the "ratio" advantage column
-# (baseline_total / our_total). Matched by full name, NOT suffix: the skew
-# section's "pwp_ratio" (fraction of the PWP bank streamed) and "pwp_usage"
-# are smaller-is-better and must fail on growth like the byte counts.
-_HIGHER_BETTER = ("ratio",)
+# Columns where LARGER is better — the "ratio" advantage column
+# (baseline_total / our_total) and the attention sections'
+# "phi_attn_ratio" (dense_flash / phi_flash). Matched by full name, NOT
+# suffix: the skew section's "pwp_ratio" (fraction of the PWP bank
+# streamed) and "pwp_usage" are smaller-is-better and must fail on growth
+# like the byte counts.
+_HIGHER_BETTER = ("ratio", "phi_attn_ratio")
 
 # Simulator-section column classes, matched by substring (checked in this
 # order, so "energy_eff" reads as higher-better before "energy" could claim

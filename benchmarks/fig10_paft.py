@@ -60,4 +60,8 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    try:
+        from benchmarks.common import figure_json_cli
+    except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+        from common import figure_json_cli
+    figure_json_cli("fig10_paft", "BENCH_fig10.json", main, __doc__)

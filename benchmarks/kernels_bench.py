@@ -267,10 +267,55 @@ def main(json_path: str | None = None) -> list[str]:
             f"{sh8['coo'] / sh8['fused'].total:.2f}"
             "x_less_per_device_than_coo_demotion")
 
+    # ---- Phi-sparse attention: the spiking-transformer hot path -----------
+    # Binary spike Q/K make the flash score blocks Phi matmuls (L1 pattern
+    # gather + L2 residual, kernels/phi_attention.py); the policy resolves
+    # phi_flash for spike sites and keeps dense flash for LM-style dense
+    # Q/K. Wall rows are the A/B through the policy; the gated claim is the
+    # modelled HBM traffic at the paper Table-4 residual densities.
+    from repro.core.perfmodel import phi_attention_traffic
+    from repro.models import flash as flash_mod
+    Ba, Sa, Ha, Da = 1, 256, 2, 64
+    qa = jnp.asarray(rng.random((Ba, Sa, Ha, Da)) < 0.1, jnp.float32)
+    ka = jnp.asarray(rng.random((Ba, Sa, Ha, Da)) < 0.1, jnp.float32)
+    va = jnp.asarray(rng.random((Ba, Sa, Ha, Da)) < 0.1, jnp.float32)
+    patsa = jnp.asarray(calibrate(
+        np.asarray(ka).reshape(-1, Da), PhiConfig(k=16, q=64, iters=6)))
+    da = pol.resolve_attention(site="bench.attn_spike", s=Sa, d=Da, heads=Ha,
+                               batch=Ba, t=patsa.shape[0], q=patsa.shape[1],
+                               kp=patsa.shape[2], spike_qk=True,
+                               has_patterns=True)
+    rec("policy_pick_attn_spike", 0.0, f"impl={da.impl}_reason={da.reason}",
+        impl=da.impl, reason=da.reason, shape=[Ba, Sa, Ha, Da],
+        blocks=list(da.blocks or ()))
+    dd = pol.resolve_attention(site="bench.attn_dense", s=Sa, d=Da, heads=Ha,
+                               batch=Ba, spike_qk=False, has_patterns=False)
+    rec("policy_pick_attn_dense", 0.0, f"impl={dd.impl}_reason={dd.reason}",
+        impl=dd.impl, reason=dd.reason, shape=[Ba, Sa, Ha, Da])
+    bqa, bkva = da.blocks
+    t_attn_phi = _time(lambda: pol.attention(
+        qa, ka, va, patsa, site="bench.attn_phi", spike_qk=True), reps=reps)
+    rec("attn_phi_flash_" + mode, t_attn_phi, "1.00x", impl="phi_flash",
+        shape=[Ba, Sa, Ha, Da])
+    t_attn_dense = _time(lambda: flash_mod.flash_attention(
+        qa, ka, va, False, None, None, bqa, bkva), reps=reps)
+    rec("attn_dense_flash_" + mode, t_attn_dense,
+        f"{t_attn_dense / t_attn_phi:.2f}x_of_phi_flash", impl="flash",
+        shape=[Ba, Sa, Ha, Da])
+    # input spike density -> Table-4 L2⁺+L2⁻ residual density (PAPER_RANDOM)
+    attn_table4 = {0.05: 0.026, 0.10: 0.034, 0.20: 0.068}
+    for dens, l2 in attn_table4.items():
+        tra = phi_attention_traffic(Sa, Da, heads=Ha, batch=Ba, k=16,
+                                    q=int(patsa.shape[1]), block_q=bqa,
+                                    block_kv=bkva, l2_density=l2)
+        traffic[f"attn_p{int(dens * 100):02d}"] = tra
+        rec(f"hbm_bytes_attn_p{int(dens * 100):02d}", tra["phi_flash"],
+            f"{tra['phi_attn_ratio']:.2f}x_less_traffic_than_dense_flash")
+
     if json_path:
         jax.effects_barrier()   # flush policy telemetry callbacks
         payload = {
-            "schema": 4,
+            "schema": 5,
             "backend": jax.default_backend(),
             "shape": {"m": M, "k": K, "n": N, "bench_m": bench_m},
             "sharded_shape": {"m": M, "k": K, "n": N, "shards": 8,
@@ -279,6 +324,8 @@ def main(json_path: str | None = None) -> list[str]:
             "skew_shape": {"m": Mz, "k": Kz, "n": Nz, "q": qz,
                            "pwp_usage": round(usage_frac, 6),
                            "p_active": p_active},
+            "attn_shape": {"b": Ba, "s": Sa, "h": Ha, "d": Da,
+                           "block_q": bqa, "block_kv": bkva},
             "rows": records,
             # primary-shape rows only (large-K rows carry a "shape" key and
             # would otherwise clobber the per-impl summary)

@@ -37,4 +37,8 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    try:
+        from benchmarks.common import figure_json_cli
+    except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+        from common import figure_json_cli
+    figure_json_cli("roofline", "BENCH_roofline.json", main, __doc__)

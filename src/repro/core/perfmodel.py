@@ -379,6 +379,57 @@ def phi_sharded_traffic(shape: GemmShape, *, shards: int,
             "fused": traffic[impl], "coo": coo, "psum_bytes": psum}
 
 
+# ----------------------------------------------- Phi attention HBM traffic ---
+def phi_attention_traffic(s: int, d: int, *, heads: int = 1, batch: int = 1,
+                          k: int = 16, q: int = 128, block_q: int = 128,
+                          block_kv: int = 128,
+                          l2_density: float = 0.03) -> dict[str, float]:
+    """First-order HBM bytes of ``phi_flash`` vs dense flash attention.
+
+    Dense flash re-streams the full K/V panels once per q-block (the classic
+    flash cost: O(nq·S·D) f32 bytes), plus Q and the output once. The Phi
+    lowering exploits what dense flash cannot: binary spike K rows stream as
+    1-byte one-hot *indices* into the pattern bank (matched once, re-read per
+    q-block) plus the sparse ±1 L2 residual as COO — so the per-q-block K
+    traffic scales with ``l2_density`` (Table 4's L2⁺+L2⁻ residual density)
+    instead of D f32 columns, and spike V panels stream at 1 byte/element.
+    Q and the output stay f32 in both lowerings, so the ratio is driven by
+    the K/V re-streaming term exactly as score FLOPs are by the L1/L2 split.
+
+    ``l2_density`` is the residual nnz fraction of the K spike matrix
+    (``core.patterns.PhiStats.l2_density``); paper Table-4 spike suites sit
+    at 0.026–0.068 for 5–20 % input densities.
+
+    Returns ``{"dense_flash": bytes, "phi_flash": bytes,
+    "phi_attn_ratio": dense/phi}`` — the ratio is the no-shrink column
+    ``benchmarks/check_regression.py`` gates.
+    """
+    bq = min(block_q, s)
+    bkv = min(block_kv, s)
+    nq = -(-s // bq)
+    skv = -(-s // bkv) * bkv
+    bh = batch * heads
+    f32 = 4
+    t = max(d // k, 1)
+    # dense flash: Q + out once; K,V f32 panels re-streamed per q-block.
+    dense = bh * (s * d * f32                 # Q
+                  + nq * skv * d * f32 * 2    # K, V per q-block
+                  + s * d * f32)              # out
+    # phi_flash: Q + out once (f32); per q-block the K panel is the pattern
+    # bank (binary, kp·qp per partition) + a 1-byte idx stream + the sparse
+    # L2 residual COO (4-byte col + 1-byte sign per entry... row implicit in
+    # the block walk) + the binary V panel.
+    coo_entry = 2                             # packed (col:int16-ish, ±1 sign)
+    phi = bh * (s * d * f32                   # Q
+                + nq * (t * q * k             # binary pattern bank
+                        + skv * t             # one-hot idx stream, 1 B
+                        + l2_density * skv * d * coo_entry   # L2 residual COO
+                        + skv * d)            # binary V panel, 1 B
+                + s * d * f32)                # out
+    return {"dense_flash": float(dense), "phi_flash": float(phi),
+            "phi_attn_ratio": float(dense) / float(phi)}
+
+
 # --------------------------------------------------- packer budget report ---
 # The fused Pallas kernel is budget-free (it contracts the L2 residual
 # densely in VMEM) but emits per-M-block l2_nnz counters; the execution

@@ -82,6 +82,13 @@ import numpy as np
 from repro.utils import log
 
 IMPLS = ("fused", "fused_stream", "fused_prefetch", "pallas", "coo", "ref")
+# Attention lowerings (PR 7): "phi_flash" = pattern-hierarchical flash
+# (kernels/phi_attention.py; Pallas kernel, or its pjit-safe pure-XLA
+# fallback when the reason carries an "_xla" suffix); "flash" = the dense
+# blockwise lowering in models/flash.py. Only binary spike Q/K sites with a
+# calibrated pattern bank resolve "phi_flash" — dense LM attention keeps
+# "flash".
+ATTN_IMPLS = ("phi_flash", "flash")
 _PALLAS_IMPLS = ("fused", "fused_stream", "fused_prefetch", "pallas")
 # emit the l2_nnz audit counter
 _FUSED_IMPLS = ("fused", "fused_stream", "fused_prefetch")
@@ -470,6 +477,143 @@ class PhiExecutionPolicy:
         self._record_decision(d)
         return d
 
+    # --------------------------------------------------------- attention --
+    def resolve_attention(self, *, site: str = "anon", s: int, d: int,
+                          heads: int = 1, batch: int = 1, t: int = 0,
+                          q: int = 0, kp: int = 0, spike_qk: bool = False,
+                          has_patterns: bool = False,
+                          override: str | None = None,
+                          config_override: str | None = None,
+                          transform: bool = False) -> Decision:
+        """Resolve the attention lowering for one call site.
+
+        The spike-input gate is declarative: the caller states whether its
+        Q/K operands are binary spike tensors (``spike_qk``) — binarity is a
+        value property invisible at trace time. Only spike sites with a
+        calibrated pattern bank resolve ``"phi_flash"``; everything else —
+        dense LM attention, autodiff/vmap traces (the Phi lowerings define
+        no VJP; ``models/flash.py`` does), missing banks — keeps
+        ``"flash"``. Inside a pjit-traced SPMD region the Phi path stays
+        available through its pure-XLA fallback (reason suffix ``_xla``);
+        a shard_map body re-gates the Pallas kernel on the local shape
+        (``spmd_local_*``, shard count recorded) exactly like the matmul
+        rows. ``Decision.shape`` maps the score GEMM:
+        (batch·heads·s, d, s, t, q); ``Decision.blocks`` carries the
+        (block_q, block_kv) both the Phi arm *and* a forced dense-flash arm
+        must share for the bitwise A/B contract.
+        """
+        from repro.kernels import ops
+
+        for o in (override, config_override):
+            if o is not None and o not in ATTN_IMPLS:
+                raise ValueError(
+                    f"unknown attention impl override {o!r} at site "
+                    f"{site!r}; expected one of {ATTN_IMPLS}")
+        backend = _backend()
+        shape = (batch * heads * s, d, s, t, q)
+        # Off-TPU the Phi production path is the pure-XLA lowering, not the
+        # interpret-mode Pallas kernel: only the XLA path shares the dense
+        # flash accumulator *code*, which is what anchors the bitwise A/B
+        # contract (the interpret kernel keeps scores exact but cannot track
+        # XLA's fusion rounding ulp-for-ulp), and interpret mode is orders of
+        # magnitude slower anyway. Tests drive the kernel directly.
+        mode = "native" if backend == "tpu" else "xla"
+        spmd = in_spmd_region()
+        transform = transform or in_autodiff_region()
+        spmd_local = spmd and not transform and _axis_env_nonempty()
+        shards = _axis_env_shards() if spmd_local else None
+        ov, which = next(
+            ((o, lbl) for o, lbl in ((override, "call"),
+                                     (config_override, "config"),
+                                     (None, "policy"))
+             if o is not None), (None, None))
+        viable = has_patterns and ops.attn_shape_viable(s, d, t, q, kp)
+        if ov == "flash":
+            dec = Decision("flash", f"{which}_override", site, shape, backend)
+        elif ov == "phi_flash":
+            if transform:
+                dec = Decision("flash", "autodiff_demotes_phi_flash", site,
+                               shape, backend)
+            elif not has_patterns:
+                dec = Decision("flash", "no_patterns_demotes_phi_flash",
+                               site, shape, backend)
+            elif spmd and not spmd_local:
+                dec = Decision("phi_flash", "spmd_region_phi_flash_xla",
+                               site, shape, backend)
+            elif not viable:
+                dec = Decision("phi_flash", "vmem_gate_phi_flash_xla", site,
+                               shape, backend)
+            else:
+                dec = Decision("phi_flash", f"{which}_override", site,
+                               shape, backend)
+        elif transform:
+            dec = Decision("flash", "autodiff_keeps_flash", site, shape,
+                           backend)
+        elif not spike_qk:
+            dec = Decision("flash", "dense_qk_keeps_flash", site, shape,
+                           backend)
+        elif not has_patterns:
+            dec = Decision("flash", "no_patterns_keeps_flash", site, shape,
+                           backend)
+        elif spmd and not spmd_local:
+            # pjit-traced SPMD region: a pallas_call cannot be partitioned,
+            # but the pure-XLA Phi lowering can — keep the decomposition.
+            dec = Decision("phi_flash", "spmd_region_phi_flash_xla", site,
+                           shape, backend)
+        elif spmd_local:
+            if viable:
+                dec = Decision("phi_flash", f"spmd_local_phi_flash_{mode}",
+                               site, shape, backend)
+            else:
+                dec = Decision("phi_flash", "spmd_local_vmem_phi_flash_xla",
+                               site, shape, backend)
+        elif not viable:
+            dec = Decision("phi_flash", "vmem_gate_phi_flash_xla", site,
+                           shape, backend)
+        else:
+            dec = Decision("phi_flash", f"spike_qk_phi_flash_{mode}", site,
+                           shape, backend)
+        dec = dataclasses.replace(
+            dec, blocks=ops.autotune_attn_blocks(s, d, t, q, kp))
+        if shards is not None:
+            dec = dataclasses.replace(dec, shards=shards)
+        self._record_decision(dec)
+        return dec
+
+    def attention(self, q: jax.Array, k: jax.Array, v: jax.Array,
+                  patterns=None, *, site: str = "anon", causal: bool = False,
+                  window: int | None = None, chunk: int | None = None,
+                  spike_qk: bool = False, override: str | None = None,
+                  config_override: str | None = None) -> jax.Array:
+        """Policy-dispatched flash attention: q/k/v (B, S, H, D).
+
+        ``patterns`` is the (T, qp, kp) bank calibrated on the site's K
+        spike rows (None for uncalibrated/dense sites). Both lowerings run
+        the blocks the decision carries, so a forced ``override="flash"``
+        A/B arm is bit-identical to the resolved ``phi_flash`` one for
+        binary Q/K.
+        """
+        from repro.kernels import ops
+        from repro.models import flash as flash_mod
+
+        B, S, H, D = q.shape
+        t = qp = kp = 0
+        if patterns is not None:
+            t, qp, kp = np.asarray(patterns).shape[-3:]
+        dec = self.resolve_attention(
+            site=site, s=S, d=D, heads=H, batch=B, t=t, q=qp, kp=kp,
+            spike_qk=spike_qk, has_patterns=patterns is not None,
+            override=override, config_override=config_override,
+            transform=_under_transform(q, k, v))
+        bq, bkv = dec.blocks
+        if dec.impl == "flash":
+            return flash_mod.flash_attention(q, k, v, causal, window, chunk,
+                                             bq, bkv)
+        mode = "xla" if dec.reason.endswith("_xla") else "pallas"
+        return ops.phi_flash_attention(
+            q, k, v, patterns, causal=causal, window=window, chunk=chunk,
+            block_q=bq, block_kv=bkv, impl=mode)
+
     def _record_decision(self, d: Decision) -> None:
         key = (d.site, d.impl, d.reason)
         with self._lock:
@@ -688,6 +832,13 @@ def phi_matmul(a, w, patterns, pwp, **kwargs) -> jax.Array:
     same keywords as :meth:`PhiExecutionPolicy.matmul` (``site``,
     ``override``, ``nnz_budget``, ``gather_dtype``, ``pwp_scale``)."""
     return _default_policy.matmul(a, w, patterns, pwp, **kwargs)
+
+
+def phi_flash_attention(q, k, v, patterns=None, **kwargs) -> jax.Array:
+    """Module-level shorthand: policy-dispatched flash attention. Accepts
+    the same keywords as :meth:`PhiExecutionPolicy.attention` (``site``,
+    ``causal``/``window``/``chunk``, ``spike_qk``, ``override``)."""
+    return _default_policy.attention(q, k, v, patterns, **kwargs)
 
 
 # -------------------------------------------------- checkpoint persistence ---

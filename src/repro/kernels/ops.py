@@ -522,6 +522,106 @@ def autotune_prefetch_blocks(M: int, K: int, N: int, q: int, T: int,
     return best
 
 
+def _attn_vmem_bytes(bq: int, bkv: int, S: int, D: int, T: int, qp: int,
+                     kp: int) -> int:
+    """Per-program f32 working set of the Phi flash-attention kernel
+    (``phi_attention._attn_kernel``): one q-block plus the full padded K/V
+    panels, the pattern bank, the per-partition pattern×Q products, the
+    transposed L1/L2 score accumulators, the softmax block and the output
+    accumulator."""
+    return 4 * (bq * D            # q block
+                + 2 * S * D       # resident K and V panels
+                + T * qp * kp     # pattern bank
+                + (qp + 1) * bq   # pattern×Q products (one partition live)
+                + 2 * bkv * bq    # L1/L2 score accumulators
+                + bq * bkv        # softmax p block
+                + 2 * bq * D)     # out accumulator + out block
+
+
+def _attn_candidates(S: int) -> list[tuple[int, int]]:
+    cap = max(8, 1 << (max(S, 1) - 1).bit_length())
+    bqs = sorted({min(b, cap) for b in (128, 256, 512)})
+    bkvs = sorted({min(b, cap) for b in (128, 256, 512, 1024)})
+    return [(bq, bkv) for bq in bqs for bkv in bkvs]
+
+
+def attn_shape_viable(S: int, D: int, T: int, qp: int, kp: int) -> bool:
+    """VMEM gate for the execution policy's attention row: True when some
+    (block_q, block_kv) config of the Phi flash kernel fits the budget."""
+    return min(_attn_vmem_bytes(bq, bkv, S, D, T, qp, kp)
+               for bq, bkv in _attn_candidates(S)) <= _VMEM_BUDGET_BYTES
+
+
+_ATTN_TUNE_CACHE: dict[tuple, tuple[int, int]] = {}
+
+
+def autotune_attn_blocks(S: int, D: int, T: int, qp: int,
+                         kp: int) -> tuple[int, int]:
+    """Pick (block_q, block_kv) for the Phi flash-attention kernel.
+
+    Heuristic only (largest blocks under the ``_attn_vmem_bytes`` budget,
+    preferring wide kv blocks — fewer online-softmax rescales): unlike the
+    matmul autotuners there is no measurement pass, because the dense-flash
+    A/B arm must run the *same* blocks for the bitwise-identity contract
+    and a timed choice would couple it to wall-clock noise.
+    """
+    key = (S, D, T, qp, kp)
+    if key in _ATTN_TUNE_CACHE:
+        return _ATTN_TUNE_CACHE[key]
+    cands = [c for c in _attn_candidates(S)
+             if _attn_vmem_bytes(c[0], c[1], S, D, T, qp, kp)
+             <= _VMEM_BUDGET_BYTES]
+    cands = cands or [min(_attn_candidates(S),
+                          key=lambda c: _attn_vmem_bytes(c[0], c[1], S, D,
+                                                         T, qp, kp))]
+    best = max(cands, key=lambda c: (c[0] * c[1], c[1]))
+    _ATTN_TUNE_CACHE[key] = best
+    return best
+
+
+def phi_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        patterns, *, causal: bool = False,
+                        window: int | None = None, chunk: int | None = None,
+                        block_q: int | None = None,
+                        block_kv: int | None = None,
+                        impl: str | None = None) -> jax.Array:
+    """Phi-sparse flash attention: q/k/v (B, S, H, D) with binary spike Q/K,
+    patterns (T, qp, kp) calibrated on the K rows (T·kp ≤ D; the ragged
+    tail is contracted densely). Output matches ``models.flash``'s
+    ``flash_attention(q, k, v, causal, window, chunk, block_q, block_kv)``
+    layout **bitwise** (binary operands make every score block integer-
+    exact, and scale is applied after the contraction in both lowerings).
+
+    impl: "pallas" — fused kernel (native on TPU, interpret elsewhere);
+          "xla"    — pure-XLA fallback sharing the dense flash accumulator
+                     (pjit-safe: SPMD regions resolve here);
+          None     — "pallas".
+    """
+    from repro.kernels import phi_attention as pa
+
+    B, S, H, D = q.shape
+    pats = jnp.asarray(patterns)
+    T, qp, kp = pats.shape
+    if T * kp > D:
+        raise ValueError(
+            f"phi_flash_attention: pattern bank covers {T}×{kp}={T * kp} "
+            f"features but head_dim is only {D} — the bank was calibrated "
+            "for a different head layout")
+    if block_q is None or block_kv is None:
+        bq, bkv = autotune_attn_blocks(S, D, T, qp, kp)
+        block_q, block_kv = block_q or bq, block_kv or bkv
+    impl = impl or "pallas"
+    if impl == "xla":
+        return pa.phi_flash_attention_xla(
+            q, k, v, pats, causal=causal, window=window, chunk=chunk,
+            block_q=block_q, block_kv=block_kv)
+    assert impl == "pallas", impl
+    out, _ = pa.phi_flash_attention_pallas(
+        q, k, v, pats, causal=causal, window=window, chunk=chunk,
+        block_q=block_q, block_kv=block_kv, interpret=_interpret())
+    return out
+
+
 def _fused_prologue(a2: jax.Array, pwp: jax.Array,
                     pwp_scale: jax.Array | None, T: int, q: int, N: int,
                     block_m: int, block_n: int):

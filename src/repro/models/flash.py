@@ -34,6 +34,20 @@ def _mask(qpos, kpos, *, causal: bool, window: int | None, chunk: int | None):
     return m
 
 
+def _pad_seq(x, to: int):
+    """Zero-pad the sequence axis (dim 2 of a (B, H, S, ...) array) to ``to``."""
+    pad = to - x.shape[2]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[2] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _dense_scores(qi, kj):
+    return jnp.einsum("bhqd,bhkd->bhqk", qi, kj)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
                     chunk: int | None = None, block_q: int = 512,
@@ -43,27 +57,42 @@ def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
     return out
 
 
-def _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv):
+def _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv,
+                    score_fn=None):
+    """Forward online softmax. ``score_fn(qi, kj) -> (B, H, bq, bkv)`` is the
+    score-block hook (default: dense einsum); ``kernels.phi_attention``
+    substitutes the Phi L1+L2 decomposition here while sharing this
+    accumulator code, so the two lowerings differ only in how the (exact)
+    scores are produced. Scores are scaled *after* the contraction: binary
+    Q/K then yield integer-exact score blocks under any contraction order,
+    which is what makes the Phi path bit-identical to the dense one."""
     B, S, H, D = q.shape
     scale = D ** -0.5
     bq, bkv = min(block_q, S), min(block_kv, S)
-    nq, nkv = S // bq, S // bkv
-    qt = jnp.moveaxis(q, 2, 1).astype(jnp.float32)   # (B, H, S, D)
-    kt = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
-    vt = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
+    # Pad each sequence axis up to whole blocks (S need not divide bq/bkv —
+    # the old `S // bq` silently dropped the tail). Padded *key* positions
+    # are masked out of every score block; padded *query* rows compute
+    # garbage that is sliced off before returning.
+    sq, skv = S + (-S) % bq, S + (-S) % bkv
+    nq, nkv = sq // bq, skv // bkv
+    qt = _pad_seq(jnp.moveaxis(q, 2, 1).astype(jnp.float32), sq)  # (B,H,sq,D)
+    kt = _pad_seq(jnp.moveaxis(k, 2, 1).astype(jnp.float32), skv)
+    vt = _pad_seq(jnp.moveaxis(v, 2, 1).astype(jnp.float32), skv)
+    scores = score_fn or _dense_scores
 
     def q_block(iq):
-        qi = jax.lax.dynamic_slice_in_dim(qt, iq * bq, bq, 2) * scale
+        qi = jax.lax.dynamic_slice_in_dim(qt, iq * bq, bq, 2)
         qpos = iq * bq + jnp.arange(bq)
 
         def kv_step(carry, jk):
             m, den, acc = carry
             kj = jax.lax.dynamic_slice_in_dim(kt, jk * bkv, bkv, 2)
             vj = jax.lax.dynamic_slice_in_dim(vt, jk * bkv, bkv, 2)
-            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj)
+            s = scores(qi, kj) * scale
             kpos = jk * bkv + jnp.arange(bkv)
-            s = jnp.where(_mask(qpos, kpos, causal=causal, window=window,
-                                chunk=chunk)[None, None], s, -jnp.inf)
+            valid = _mask(qpos, kpos, causal=causal, window=window,
+                          chunk=chunk) & (kpos < S)[None, :]
+            s = jnp.where(valid[None, None], s, -jnp.inf)
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
@@ -81,8 +110,8 @@ def _flash_fwd_impl(q, k, v, causal, window, chunk, block_q, block_kv):
         return o, lse
 
     o, lse = jax.lax.map(q_block, jnp.arange(nq))    # (nq, B, H, bq, D/·)
-    o = jnp.moveaxis(o, 0, 2).reshape(B, H, S, D)
-    lse = jnp.moveaxis(lse, 0, 2).reshape(B, H, S)
+    o = jnp.moveaxis(o, 0, 2).reshape(B, H, sq, D)[:, :, :S]
+    lse = jnp.moveaxis(lse, 0, 2).reshape(B, H, sq)[:, :, :S]
     return jnp.moveaxis(o, 1, 2).astype(q.dtype), lse
 
 
@@ -96,19 +125,26 @@ def _flash_bwd(causal, window, chunk, block_q, block_kv, res, dout):
     B, S, H, D = q.shape
     scale = D ** -0.5
     bq, bkv = min(block_q, S), min(block_kv, S)
-    nq, nkv = S // bq, S // bkv
-    qt = jnp.moveaxis(q, 2, 1).astype(jnp.float32)
-    kt = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
-    vt = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
-    dot_ = jnp.moveaxis(dout, 2, 1).astype(jnp.float32)
-    ot = jnp.moveaxis(out, 2, 1).astype(jnp.float32)
-    delta = (dot_ * ot).sum(-1)                      # (B, H, S)
+    # Same pad-and-mask contract as the forward: padded key columns and
+    # padded query rows are zeroed out of every recomputed p block (padded
+    # rows carry a garbage lse, so masking p — not s — is what keeps the
+    # inf/NaN they would produce out of dk/dv).
+    sq, skv = S + (-S) % bq, S + (-S) % bkv
+    nq, nkv = sq // bq, skv // bkv
+    qt = _pad_seq(jnp.moveaxis(q, 2, 1).astype(jnp.float32), sq)
+    kt = _pad_seq(jnp.moveaxis(k, 2, 1).astype(jnp.float32), skv)
+    vt = _pad_seq(jnp.moveaxis(v, 2, 1).astype(jnp.float32), skv)
+    dot_ = _pad_seq(jnp.moveaxis(dout, 2, 1).astype(jnp.float32), sq)
+    ot = _pad_seq(jnp.moveaxis(out, 2, 1).astype(jnp.float32), sq)
+    lse = jnp.pad(lse, ((0, 0), (0, 0), (0, sq - S)))
+    delta = (dot_ * ot).sum(-1)                      # (B, H, sq)
 
     def p_block(qi, lse_i, kj, qpos, kpos):
         s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj) * scale
         p = jnp.exp(s - lse_i[..., None])
-        return jnp.where(_mask(qpos, kpos, causal=causal, window=window,
-                               chunk=chunk)[None, None], p, 0.0)
+        valid = (_mask(qpos, kpos, causal=causal, window=window, chunk=chunk)
+                 & (qpos < S)[:, None] & (kpos < S)[None, :])
+        return jnp.where(valid[None, None], p, 0.0)
 
     # ---- dq pass: q-major, block-local accumulator
     def dq_block(iq):
@@ -130,7 +166,7 @@ def _flash_bwd(causal, window, chunk, block_q, block_kv, res, dout):
         return dq_i
 
     dq = jax.lax.map(dq_block, jnp.arange(nq))       # (nq, B, H, bq, D)
-    dq = jnp.moveaxis(dq, 0, 2).reshape(B, H, S, D)
+    dq = jnp.moveaxis(dq, 0, 2).reshape(B, H, sq, D)[:, :, :S]
 
     # ---- dk/dv pass: kv-major, block-local accumulators
     def dkv_block(jk):
@@ -156,8 +192,8 @@ def _flash_bwd(causal, window, chunk, block_q, block_kv, res, dout):
         return dk_j, dv_j
 
     dk, dv = jax.lax.map(dkv_block, jnp.arange(nkv))
-    dk = jnp.moveaxis(dk, 0, 2).reshape(B, H, S, D)
-    dv = jnp.moveaxis(dv, 0, 2).reshape(B, H, S, D)
+    dk = jnp.moveaxis(dk, 0, 2).reshape(B, H, skv, D)[:, :, :S]
+    dv = jnp.moveaxis(dv, 0, 2).reshape(B, H, skv, D)[:, :, :S]
 
     def back(x):
         return jnp.moveaxis(x, 1, 2).astype(q.dtype)

@@ -203,6 +203,18 @@ def attention_prefill(cfg: ModelConfig, layer_idx, q, k, v, *, layer_global: boo
             return chunked_local_attention(q, k, v, chunk)
         return flash_attention(q, k, v, causal=True, window=window,
                                block_q=min(512, S), block_kv=min(1024, S))
+    # Route the flash branch through the Phi execution policy: dense LM Q/K
+    # are not spikes, so the site records ``dense_qk_keeps_flash`` and the
+    # policy hands back the dense custom-VJP flash lowering — the decision
+    # row is what documents that spiking Q/K would resolve ``phi_flash``
+    # here. Site name is static (layer_idx may be a tracer under
+    # scan-over-layers).
+    from repro.kernels import dispatch
+
+    B, _, H, D = q.shape
+    dispatch.get_policy().resolve_attention(
+        site="lm.attn_prefill", s=S, d=D, heads=H, batch=B,
+        spike_qk=False, has_patterns=False)
     return flash_mod.flash_attention(q, k, v, True, window, chunk,
                                      min(cfg.flash_block_q, S),
                                      min(cfg.flash_block_kv, S))

@@ -33,6 +33,7 @@ class SNNConfig:
     dim: int = 128               # spikformer embed dim
     heads: int = 4
     blocks: int = 2
+    attn: str = "ssa"            # "ssa" (softmax-free spiking SA) | "flash"
     lif: LIFConfig = LIFConfig()
     phi: PhiConfig = PhiConfig()
 
@@ -109,10 +110,37 @@ def _maybe_capture(cap: dict | None, name: str, act: jax.Array, k: int) -> None:
 
 
 MatmulFn = Callable[[jax.Array, jax.Array, str], jax.Array]
+AttnFn = Callable[[jax.Array, jax.Array, jax.Array, str], jax.Array]
 
 
 def _plain_matmul(a: jax.Array, w: jax.Array, name: str) -> jax.Array:
     return a @ w
+
+
+def spike_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          patterns=None, *, site: str = "snn.attn",
+                          impl: str | None = None) -> jax.Array:
+    """Policy-dispatched softmax attention over spikformer head tensors.
+
+    q/k/v: (T, B, H, S, Dh) spike tensors (spikformer head layout). Folds
+    timesteps into the batch axis — each timestep's attention is independent
+    — and routes through ``kernels.dispatch``: with a calibrated ``patterns``
+    bank the site resolves ``phi_flash`` (L1 pattern gather + L2 residual
+    score blocks), without one it keeps dense flash. ``impl`` forces an
+    ``ATTN_IMPLS`` arm (the bitwise A/B hook ``phi_apply`` exposes as
+    ``attn_impl``); both arms share the decision's (block_q, block_kv).
+    """
+    from repro.kernels import dispatch
+
+    T, B, H, S, Dh = q.shape
+
+    def fold(z):
+        return jnp.moveaxis(z.reshape(T * B, H, S, Dh), 1, 2)  # (TB,S,H,Dh)
+
+    out = dispatch.get_policy().attention(
+        fold(q), fold(k), fold(v), patterns, site=site, causal=False,
+        spike_qk=True, override=impl)
+    return jnp.moveaxis(out, 2, 1).reshape(T, B, H, S, Dh)
 
 
 def apply(
@@ -122,11 +150,17 @@ def apply(
     *,
     capture: dict | None = None,
     matmul: MatmulFn = _plain_matmul,
+    attention: AttnFn | None = None,
 ) -> jax.Array:
     """Forward pass. x: (B,H,W,C) images or (B,T,H,W,C) event frames.
 
     Returns logits (B, classes). ``matmul`` is the injection point for Phi:
-    it receives (spike_activations, weight, layer_name) for every spiking GEMM.
+    it receives (spike_activations, weight, layer_name) for every spiking
+    GEMM. ``attention`` is the analogous hook for the spikformer attention
+    hot path — it receives (q, k, v, site_name) head tensors, used only when
+    ``cfg.attn == "flash"`` (``phi_apply`` injects the Phi-dispatched
+    softmax attention there; the default ``"ssa"`` spiking self-attention
+    has no softmax and stays on the matmul path).
     """
     T = cfg.timesteps
     if x.ndim == 5:  # event stream: (B, T, H, W, C) — use frames as timesteps
@@ -201,7 +235,18 @@ def apply(
                 return z.reshape(T, B, -1, H, D // H).transpose(0, 1, 3, 2, 4)
 
             q, k_, v = lif_sequence(heads(q), lif), lif_sequence(heads(k_), lif), lif_sequence(heads(v), lif)
-            attn = (q @ k_.transpose(0, 1, 2, 4, 3)) @ v * (0.125)  # spiking SA: no softmax
+            if cfg.attn == "flash":
+                # Softmax attention over binary spike Q/K — the Phi-sparse
+                # hot path. Capture K spike rows for pattern calibration
+                # (site has no weight; the bank decomposes the score GEMM).
+                if capture is not None and D // H >= cfg.phi.k:
+                    _maybe_capture(capture, f"b{b}_attn", k_, cfg.phi.k)
+                if attention is not None:
+                    attn = attention(q, k_, v, f"b{b}_attn")
+                else:
+                    attn = spike_flash_attention(q, k_, v, site=f"snn.b{b}_attn")
+            else:
+                attn = (q @ k_.transpose(0, 1, 2, 4, 3)) @ v * (0.125)  # spiking SA: no softmax
             attn = attn.transpose(0, 1, 3, 2, 4).reshape(T, B, -1, D)
             sa = lif_sequence(attn, lif)
             _maybe_capture(capture, f"b{b}_proj", sa, cfg.phi.k)
@@ -252,11 +297,17 @@ def calibrate_model(
     patterns, pwps, usage = {}, {}, {}
     for name, act in acts.items():
         pats = calibrate(act, cfg.phi)
-        w = _layer_weight(params, name)
         K = pats.shape[0] * cfg.phi.k
         patterns[name] = pats
-        pwps[name] = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w[:K]))
         usage[name] = pattern_usage(act[:, :K], pats)
+        if name.endswith("_attn"):
+            # Attention sites calibrate on K spike rows but have no weight
+            # matrix — the score-block "weight" is the q-block, so the
+            # pattern×Q products are built per block at run time
+            # (kernels.phi_attention), not pre-gathered here.
+            continue
+        w = _layer_weight(params, name)
+        pwps[name] = pattern_weight_products(jnp.asarray(pats), jnp.asarray(w[:K]))
     return PhiState(patterns, pwps, usage), acts
 
 
@@ -285,7 +336,10 @@ def capture_phi_traces(
     apply(params, cfg, x, capture=cap)
     traces = []
     for name, pats in phi.patterns.items():
-        if name not in cap:
+        if name not in cap or name.endswith("_attn"):
+            # Attention sites have no weight matrix and their score GEMM is
+            # not a weight-stationary layer the simulator models — the
+            # perfmodel.phi_attention_traffic byte model covers them.
             continue
         n_out = _layer_weight(params, name).shape[-1]
         traces.append(trace_from_acts(
@@ -295,13 +349,17 @@ def capture_phi_traces(
 
 def phi_apply(
     params: Params, cfg: SNNConfig, phi: PhiState, x: jax.Array,
-    impl: str | None = None
+    impl: str | None = None, attn_impl: str | None = None
 ) -> jax.Array:
     """Inference with Phi sparse matmuls substituted for every spiking GEMM.
 
     ``impl=None`` (default) lets the execution policy pick the lowering per
     call (fused single-pass on a single device, the pjit-safe XLA path in
-    SPMD regions); a name from ``dispatch.IMPLS`` forces one.
+    SPMD regions); a name from ``dispatch.IMPLS`` forces one. When
+    ``cfg.attn == "flash"`` the spikformer attention sites route through the
+    policy too, with the site's calibrated bank — ``attn_impl`` forces an
+    ``dispatch.ATTN_IMPLS`` arm (``"flash"`` is the forced-dense A/B arm,
+    bit-identical to the resolved ``phi_flash`` for binary Q/K).
     """
     from repro.kernels import dispatch
 
@@ -331,4 +389,10 @@ def phi_apply(
             out = out + a[..., K:] @ w[K:]
         return out.astype(w.dtype)
 
-    return apply(params, cfg, x, matmul=phi_mm)
+    def phi_attn(qh, kh, vh, name):
+        return spike_flash_attention(
+            qh, kh, vh, phi.patterns.get(name), site=f"snn.{name}",
+            impl=attn_impl)
+
+    return apply(params, cfg, x, matmul=phi_mm,
+                 attention=phi_attn if cfg.attn == "flash" else None)

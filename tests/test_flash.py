@@ -61,3 +61,69 @@ def test_flash_block_size_invariance():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
                                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------- non-divisible S (tail positions) ---
+# Regression: `nq, nkv = S // bq, S // bkv` used to truncate, silently
+# dropping the tail (S=600 with bq=512 dropped 88 query rows). The forward
+# and backward now pad to whole blocks and mask the padding out.
+@pytest.mark.parametrize("mask", ["causal", "window", "chunk"])
+def test_flash_non_divisible_length_matches_dense(mask):
+    B, S, H, D = 1, 600, 2, 16
+    q, k, v = (_rand((B, S, H, D), i + 30) for i in range(3))
+    window = 64 if mask == "window" else None
+    chunk = 64 if mask == "chunk" else None
+    got = flash.flash_attention(q, k, v, True, window, chunk, 512, 256)
+    if chunk:
+        want = chunked_local_attention(q, k, v, chunk)
+    else:
+        want = attention_dense(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("mask", ["causal", "window", "chunk"])
+def test_flash_non_divisible_grads_match_dense(mask):
+    B, S, H, D = 1, 70, 2, 16
+    q, k, v = (_rand((B, S, H, D), i + 40) for i in range(3))
+    window = 16 if mask == "window" else None
+    chunk = 16 if mask == "chunk" else None
+    probe = jnp.asarray(np.random.default_rng(6).standard_normal(D), jnp.float32)
+
+    def f_flash(q, k, v):
+        return (flash.flash_attention(q, k, v, True, window, chunk, 64, 64)
+                * probe).sum()
+
+    def f_dense(q, k, v):
+        if chunk:
+            o = chunked_local_attention(q, k, v, chunk)
+        else:
+            o = attention_dense(q, k, v, causal=True, window=window)
+        return (o * probe).sum()
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-3,
+                                   atol=3e-3, err_msg=f"d{name}")
+
+
+def test_flash_tail_rows_not_dropped():
+    # The old truncation returned garbage (uninitialised block) for rows
+    # past the last whole block; check the tail rows specifically.
+    B, S, H, D = 1, 600, 1, 16
+    q, k, v = (_rand((B, S, H, D), i + 50) for i in range(3))
+    got = flash.flash_attention(q, k, v, True, None, None, 512, 512)
+    want = attention_dense(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got)[:, 512:],
+                               np.asarray(want)[:, 512:],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_fully_masked_rows_are_zero():
+    # window=0 empties every row's mask; flash zeroes them (NaN-guarded
+    # online softmax), matching attention_dense's fully-masked convention.
+    q, k, v = (_rand((1, 96, 2, 16), i + 60) for i in range(3))
+    got = flash.flash_attention(q, k, v, True, 0, None, 64, 64)
+    assert not np.any(np.isnan(np.asarray(got)))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros_like(got))
