@@ -1,0 +1,25 @@
+"""repro.analysis — static contract checking for the Phi kernel surface.
+
+Two layers (see docs/static_analysis.md):
+
+  * Layer 1 (``contracts`` + ``registry``): abstract-traces every registered
+    lowering and verifies grid/BlockSpec coverage, exact-counter width, and
+    VMEM byte-model fidelity against the traced kernel.
+  * Layer 2 (``lint``): repo-specific AST rules for the io_callback-barrier,
+    duplicate-PartitionSpec-axis, hardware-constant and tracer-bool bug
+    classes.
+
+Run ``python -m repro.analysis [--json out.json]``; the committed
+``baseline.json`` allowlist requires a written justification per entry.
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    ContractFinding,
+    PallasRecord,
+    actual_vmem_bytes,
+    check_counters,
+    check_coverage,
+    check_vmem_model,
+    record_pallas_calls,
+    trace_abstract,
+)
+from repro.analysis.lint import Finding, lint_paths, lint_source  # noqa: F401

@@ -1,0 +1,105 @@
+"""``python -m repro.analysis`` — run both analysis layers and gate on the
+committed baseline.
+
+Exit codes:
+  0  no findings outside the baseline, and every baseline entry is both
+     justified and still live
+  1  non-allowlisted findings (or the contract tracer itself failed)
+  2  invalid baseline: an entry with no justification, or a stale entry that
+     no longer matches any finding (baselines must shrink with the fixes)
+
+``--json PATH`` writes the structured findings report (uploaded as a CI
+artifact next to the ``BENCH_*.json`` payloads).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import lint_paths
+
+_BASELINE = Path(__file__).with_name("baseline.json")
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def load_baseline(path: Path = _BASELINE) -> tuple[dict[str, str], list[str]]:
+    """{finding key: justification}; second element lists invalid entries."""
+    if not path.exists():
+        return {}, []
+    entries = json.loads(path.read_text())
+    allow: dict[str, str] = {}
+    bad: list[str] = []
+    for e in entries:
+        key, just = e.get("key", ""), e.get("justification", "")
+        if not key or not just.strip():
+            bad.append(f"baseline entry {e!r} lacks a key or a justification "
+                       "(no bare suppressions)")
+        else:
+            allow[key] = just
+    return allow, bad
+
+
+def run(root: Path | None = None, *, layers: str = "all") -> list:
+    root = _REPO_ROOT if root is None else root  # resolved at call time
+    findings: list = []
+    if layers in ("all", "lint"):
+        findings += lint_paths(root)
+    if layers in ("all", "contracts"):
+        from repro.analysis.registry import run_contracts
+
+        findings += run_contracts()
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the structured findings report here")
+    ap.add_argument("--layer", choices=("all", "lint", "contracts"),
+                    default="all")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the allowlist")
+    args = ap.parse_args(argv)
+
+    findings = run(layers=args.layer)
+    allow, invalid = ({}, []) if args.no_baseline else load_baseline()
+
+    live, allowlisted = [], []
+    for f in findings:
+        (allowlisted if f.key in allow else live).append(f)
+    stale = [] if args.no_baseline else sorted(
+        set(allow) - {f.key for f in allowlisted})
+
+    report = {
+        "findings": [f.to_json() for f in live],
+        "allowlisted": [f.to_json() | {"justification": allow[f.key]}
+                        for f in allowlisted],
+        "stale_baseline": stale,
+        "invalid_baseline": invalid,
+        "summary": {"live": len(live), "allowlisted": len(allowlisted),
+                    "stale": len(stale), "invalid": len(invalid)},
+    }
+    if args.json:
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
+
+    for f in live:
+        print(f"FINDING  {f.key}\n         {f.message}")
+    for f in allowlisted:
+        print(f"allowed  {f.key}  ({allow[f.key]})")
+    for k in stale:
+        print(f"STALE    baseline entry no longer matches any finding: {k}")
+    for msg in invalid:
+        print(f"INVALID  {msg}")
+    print(f"repro.analysis: {len(live)} finding(s), "
+          f"{len(allowlisted)} allowlisted, {len(stale)} stale, "
+          f"{len(invalid)} invalid baseline entr(y/ies)")
+
+    if invalid or stale:
+        return 2
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

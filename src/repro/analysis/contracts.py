@@ -1,0 +1,370 @@
+"""Layer-1 static analysis: jaxpr/BlockSpec contract checks for Phi kernels.
+
+Every registered lowering (``analysis.registry``) is *abstractly* traced —
+``jax.eval_shape`` under ``jax.disable_jit()`` with ``pl.pallas_call``
+monkeypatched to a recording spy — so the checks below see the real native
+(``interpret=False``) grid, BlockSpecs, scratch shapes and operand avals
+without executing or compiling anything. Index maps are plain Python
+callables, so block coverage is enumerated with ordinary ints.
+
+Checks (rule ids shared with ``__main__``/docs):
+
+  PHI-COV-GRID    every input element read and every output block written:
+                  the union of index-mapped blocks over the grid must cover
+                  ``ceil(dim/block)`` blocks per operand. A ``S // block``
+                  floor on an unpadded operand (the PR-7 flash tail bug)
+                  leaves the tail block uncovered and fails here
+                  structurally, with no parity test needed.
+  PHI-COV-PAD     wrapper-level: the traced logical output aval must equal
+                  the expected shape, and pure-XLA lowerings traced at a
+                  non-divisible sequence length must show the padded extent
+                  in their jaxpr (pad-and-mask, never floor-truncate).
+  PHI-ACC-WIDTH   declared exact counters (the ``l2_nnz`` audit outputs):
+                  the static elements/block bound must fit the exact-integer
+                  range of the traced output dtype (f32 is exact only below
+                  2**24 — the PR-3 counter bug).
+  PHI-VMEM-MODEL  the ``_*_vmem_bytes`` byte model that gates the execution
+                  policy must bound the actual VMEM bytes reconstructed from
+                  the traced BlockSpecs + scratch shapes, within the
+                  contract's declared tolerance.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import inspect
+import itertools
+import math
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+RULE_COV_GRID = "PHI-COV-GRID"
+RULE_COV_PAD = "PHI-COV-PAD"
+RULE_ACC_WIDTH = "PHI-ACC-WIDTH"
+RULE_VMEM_MODEL = "PHI-VMEM-MODEL"
+
+# Exact-integer range of each accumulator dtype: the largest n such that all
+# integers in [0, n] are representable exactly.
+_EXACT_RANGE = {
+    "float16": 2 ** 11, "bfloat16": 2 ** 8, "float32": 2 ** 24,
+    "float64": 2 ** 53, "int16": 2 ** 15 - 1, "int32": 2 ** 31 - 1,
+    "int64": 2 ** 63 - 1, "uint32": 2 ** 32 - 1, "uint64": 2 ** 64 - 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractFinding:
+    rule: str
+    lowering: str      # registry entry name
+    case: str          # shape-matrix case name
+    detail: str        # stable sub-key (operand index, counter name, ...)
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.lowering}:{self.case}:{self.detail}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self) | {"key": self.key,
+                                           "layer": "contracts"}
+
+
+# --------------------------------------------------------------- recording --
+@dataclasses.dataclass
+class PallasRecord:
+    """One intercepted ``pl.pallas_call``: normalized grid/specs/operands."""
+    grid: tuple[int, ...]
+    in_specs: list[Any]            # BlockSpec per *data* operand (post-scalar)
+    out_specs: list[Any]
+    out_shapes: list[Any]          # ShapeDtypeStruct per output
+    scratch: list[Any]             # MemoryRef scratch allocations
+    num_scalar_prefetch: int
+    operands: list[Any]            # avals of every operand, scalars first
+
+    @property
+    def data_operands(self) -> list[Any]:
+        return self.operands[self.num_scalar_prefetch:]
+
+    @property
+    def scalar_operands(self) -> list[Any]:
+        return self.operands[:self.num_scalar_prefetch]
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+@contextlib.contextmanager
+def record_pallas_calls() -> Iterator[list[PallasRecord]]:
+    """Patch ``pl.pallas_call`` (and force the native, interpret=False kernel
+    paths) while tracing; yields the list the records land in."""
+    import jax
+    from jax.experimental import pallas as pl
+    from repro.kernels import ops
+
+    records: list[PallasRecord] = []
+    orig_call = pl.pallas_call
+    orig_interpret = ops._interpret
+
+    def spy(*args, **kwargs):
+        gs = kwargs.get("grid_spec")
+        if gs is not None:
+            rec = PallasRecord(
+                grid=tuple(gs.grid), in_specs=_as_list(gs.in_specs),
+                out_specs=_as_list(kwargs.get("out_specs") or
+                                   getattr(gs, "out_specs", None)),
+                out_shapes=_as_list(kwargs.get("out_shape")),
+                scratch=_as_list(getattr(gs, "scratch_shapes", None)),
+                num_scalar_prefetch=int(
+                    getattr(gs, "num_scalar_prefetch", 0) or 0),
+                operands=[])
+        else:
+            rec = PallasRecord(
+                grid=tuple(_as_list(kwargs.get("grid"))),
+                in_specs=_as_list(kwargs.get("in_specs")),
+                out_specs=_as_list(kwargs.get("out_specs")),
+                out_shapes=_as_list(kwargs.get("out_shape")),
+                scratch=_as_list(kwargs.get("scratch_shapes")),
+                num_scalar_prefetch=0, operands=[])
+        records.append(rec)
+        inner = orig_call(*args, **kwargs)
+
+        def with_operands(*operands):
+            rec.operands = [jax.ShapeDtypeStruct(o.shape, o.dtype)
+                            for o in operands]
+            return inner(*operands)
+
+        return with_operands
+
+    pl.pallas_call = spy
+    # the wrappers pick interpret from the backend; analysis always wants the
+    # native lowering (scratch + DMA path) — safe, nothing executes
+    ops._interpret = lambda: False
+    try:
+        with jax.disable_jit():
+            yield records
+    finally:
+        pl.pallas_call = orig_call
+        ops._interpret = orig_interpret
+
+
+def trace_abstract(fn: Callable, *avals) -> tuple[Any, list[PallasRecord]]:
+    """eval_shape ``fn`` over ShapeDtypeStructs, recording pallas calls."""
+    import jax
+
+    with record_pallas_calls() as records:
+        out = jax.eval_shape(fn, *avals)
+    return out, records
+
+
+def jaxpr_dims(fn: Callable, *avals) -> set[int]:
+    """Every dimension extent appearing in any aval of ``fn``'s jaxpr
+    (recursively through call/scan/cond sub-jaxprs)."""
+    import jax
+
+    dims: set[int] = set()
+
+    def walk(jx):
+        for v in list(jx.invars) + list(jx.outvars) + list(jx.constvars):
+            shape = getattr(getattr(v, "aval", None), "shape", ())
+            dims.update(int(d) for d in shape if isinstance(d, (int, np.integer)))
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                shape = getattr(getattr(v, "aval", None), "shape", ())
+                dims.update(int(d) for d in shape
+                            if isinstance(d, (int, np.integer)))
+            for p in eqn.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
+
+    closed = jax.make_jaxpr(fn)(*avals)
+    walk(closed.jaxpr)
+    return dims
+
+
+# ---------------------------------------------------------------- coverage --
+def _block_dims(block_shape, op_shape) -> list[int] | None:
+    """Concrete per-dim block sizes; None when the spec is unblocked (ANY
+    memory space) or its rank does not describe the operand."""
+    if block_shape is None:
+        return None
+    if len(block_shape) != len(op_shape):
+        return None
+    return [int(d) if b is None else int(b)
+            for b, d in zip(block_shape, op_shape)]
+
+
+def _enumerate_blocks(spec, grid: tuple[int, ...], op_shape,
+                      scalar_operands) -> tuple[set | None, str | None]:
+    """(set of block indices the index_map emits over the whole grid, or
+    None with a skip-reason when the map cannot be evaluated statically)."""
+    block = _block_dims(getattr(spec, "block_shape", None), op_shape)
+    if block is None:
+        return None, "unblocked (ANY memory space or rank mismatch)"
+    imap = getattr(spec, "index_map", None)
+    if imap is None:
+        return None, "no index_map"
+    try:
+        n_params = len(inspect.signature(imap).parameters)
+    except (TypeError, ValueError):
+        n_params = len(grid)
+    extra: list[Any] = []
+    if n_params > len(grid):
+        # PrefetchScalarGridSpec maps receive the scalar refs; feed zeros of
+        # the right shape so gather maps still evaluate
+        extra = [np.zeros(s.shape, np.dtype(s.dtype))
+                 for s in scalar_operands][: n_params - len(grid)]
+    seen: set[tuple[int, ...]] = set()
+    try:
+        for pt in itertools.product(*(range(g) for g in grid)):
+            bi = imap(*pt, *extra)
+            if not isinstance(bi, tuple):
+                bi = (bi,)
+            seen.add(tuple(int(b) for b in bi))
+    except Exception as e:  # data-dependent map: not statically enumerable
+        return None, f"index_map not statically evaluable ({type(e).__name__})"
+    return seen, None
+
+
+def check_coverage(rec: PallasRecord, *, lowering: str, case: str,
+                   exempt_inputs: frozenset[int] = frozenset()
+                   ) -> Iterator[ContractFinding]:
+    """PHI-COV-GRID over one recorded pallas call."""
+    specs = [("in", i, spec, op)
+             for i, (spec, op) in enumerate(zip(rec.in_specs,
+                                                rec.data_operands))
+             if i not in exempt_inputs]
+    specs += [("out", i, spec, osd)
+              for i, (spec, osd) in enumerate(zip(rec.out_specs,
+                                                  rec.out_shapes))]
+    for kind, i, spec, op in specs:
+        seen, skip = _enumerate_blocks(spec, rec.grid, op.shape,
+                                       rec.scalar_operands)
+        if seen is None:
+            continue  # unblocked / data-dependent: not this rule's business
+        block = _block_dims(spec.block_shape, op.shape)
+        needed = itertools.product(
+            *(range(math.ceil(d / b)) for d, b in zip(op.shape, block)))
+        missing = [n for n in needed if n not in seen]
+        if missing:
+            what = ("input elements never read" if kind == "in"
+                    else "output blocks never written")
+            yield ContractFinding(
+                RULE_COV_GRID, lowering, case, f"{kind}{i}",
+                f"{what}: operand shape {tuple(op.shape)} with block "
+                f"{tuple(block)} over grid {rec.grid} leaves blocks "
+                f"{missing[:4]}{'...' if len(missing) > 4 else ''} uncovered "
+                "(tail truncated instead of masked — PR-7 bug class)")
+
+
+# ----------------------------------------------------------------- padding --
+def check_logical_shape(actual, expected_shape, *, lowering: str, case: str
+                        ) -> Iterator[ContractFinding]:
+    """PHI-COV-PAD: wrapper output aval must equal the logical shape."""
+    if tuple(actual.shape) != tuple(expected_shape):
+        yield ContractFinding(
+            RULE_COV_PAD, lowering, case, "out_shape",
+            f"lowering returns shape {tuple(actual.shape)}, expected logical "
+            f"{tuple(expected_shape)} — rows dropped or padding leaked")
+
+
+def check_padded_extent(dims: set[int], required: dict[str, int], *,
+                        lowering: str, case: str) -> Iterator[ContractFinding]:
+    """PHI-COV-PAD: a pure-XLA lowering traced at a non-divisible length must
+    materialize the padded extent somewhere in its jaxpr (the pad-and-mask
+    idiom); a ``// block`` floor never produces it."""
+    for name, extent in required.items():
+        if extent not in dims:
+            yield ContractFinding(
+                RULE_COV_PAD, lowering, case, f"pad:{name}",
+                f"no intermediate with padded extent {name}={extent} in the "
+                "jaxpr — the non-divisible tail is floor-truncated instead "
+                "of padded and masked (PR-7 bug class)")
+
+
+# ------------------------------------------------------------ accumulators --
+@dataclasses.dataclass(frozen=True)
+class CounterSpec:
+    """An output declared to be an *exact integer counter* (audit stream)."""
+    out_index: int
+    name: str
+    # static upper bound on the number of unit increments one output element
+    # can accumulate, as a function of the traced record
+    bound: Callable[[PallasRecord], int]
+
+
+def check_counters(rec: PallasRecord, counters: tuple[CounterSpec, ...], *,
+                   lowering: str, case: str) -> Iterator[ContractFinding]:
+    for c in counters:
+        if c.out_index >= len(rec.out_shapes):
+            yield ContractFinding(
+                RULE_ACC_WIDTH, lowering, case, c.name,
+                f"declared counter output #{c.out_index} does not exist "
+                f"(kernel has {len(rec.out_shapes)} outputs)")
+            continue
+        dtype = np.dtype(rec.out_shapes[c.out_index].dtype)
+        bound = int(c.bound(rec))
+        limit = _EXACT_RANGE.get(dtype.name)
+        if limit is None:
+            yield ContractFinding(
+                RULE_ACC_WIDTH, lowering, case, c.name,
+                f"counter `{c.name}` has dtype {dtype.name} with no known "
+                "exact-integer range")
+        elif bound > limit:
+            yield ContractFinding(
+                RULE_ACC_WIDTH, lowering, case, c.name,
+                f"counter `{c.name}` ({dtype.name}) can accumulate up to "
+                f"{bound} unit increments but stays exact only to {limit} — "
+                "counts silently saturate/round (PR-3 bug class)")
+
+
+# ------------------------------------------------------------------- VMEM ---
+def _itemsize(dtype) -> int | None:
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        return None  # semaphores and other non-numeric scratch
+
+
+def actual_vmem_bytes(rec: PallasRecord) -> int:
+    """VMEM bytes of one program, reconstructed from the traced call: every
+    blocked operand/output window plus every numeric scratch allocation.
+    Unblocked (ANY) operands stay in HBM and contribute via the scratch
+    buffers the kernel DMAs them into."""
+    total = 0
+    for spec, op in zip(rec.in_specs, rec.data_operands):
+        block = _block_dims(getattr(spec, "block_shape", None), op.shape)
+        if block is None:
+            continue
+        total += math.prod(block) * np.dtype(op.dtype).itemsize
+    for spec, osd in zip(rec.out_specs, rec.out_shapes):
+        block = _block_dims(getattr(spec, "block_shape", None), osd.shape)
+        if block is None:
+            continue
+        total += math.prod(block) * np.dtype(osd.dtype).itemsize
+    for s in rec.scratch:
+        ms = str(getattr(s, "memory_space", "")).lower()
+        if "semaphore" in ms:
+            continue
+        size = _itemsize(getattr(s, "dtype", None))
+        if size is None:
+            continue
+        total += math.prod(s.shape) * size
+    return total
+
+
+def check_vmem_model(rec: PallasRecord, model_bytes: int, *, lowering: str,
+                     case: str, tolerance: float = 0.0
+                     ) -> Iterator[ContractFinding]:
+    actual = actual_vmem_bytes(rec)
+    if actual > model_bytes * (1.0 + tolerance):
+        yield ContractFinding(
+            RULE_VMEM_MODEL, lowering, case, "vmem",
+            f"byte model claims {model_bytes} B/program but the traced "
+            f"BlockSpecs + scratch allocate {actual} B (tolerance "
+            f"{tolerance:.0%}) — the policy's VMEM gate admits shapes the "
+            "kernel cannot hold resident")

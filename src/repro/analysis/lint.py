@@ -1,0 +1,347 @@
+"""Layer-2 static analysis: repo-specific AST lint rules.
+
+Each rule targets a bug class this repo has actually shipped (see
+docs/static_analysis.md for the rule table and the historical PRs):
+
+  PHI-LINT-BARRIER    io_callback-fed state read without a reachable
+                      ``jax.effects_barrier()`` (the PR-1 calibration race).
+  PHI-LINT-PSPEC-DUP  ``PartitionSpec`` literal naming the same mesh axis
+                      twice (the PR-2 TRAIN_RULES class — XLA rejects it at
+                      run time, inside a pjit trace, far from the typo).
+  PHI-LINT-HWCONST    hardware constants (energies, bandwidths, launch
+                      bytes, VMEM budgets) hard-coded outside
+                      ``core/hwconst.py`` — a drifting copy silently
+                      decouples the perf stories the CI gate cross-checks.
+  PHI-LINT-TRACERBOOL ``bool(...)``/``if``/``while`` on a traced array value
+                      in dispatch-resolved code — works in eager tests,
+                      raises ``TracerBoolConversionError`` the first time the
+                      call site is jitted.
+
+Pure stdlib ``ast``; no execution of the linted modules. Findings carry a
+stable key (rule:path:symbol) so the committed baseline survives line churn.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+RULE_BARRIER = "PHI-LINT-BARRIER"
+RULE_PSPEC_DUP = "PHI-LINT-PSPEC-DUP"
+RULE_HWCONST = "PHI-LINT-HWCONST"
+RULE_TRACERBOOL = "PHI-LINT-TRACERBOOL"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    symbol: str        # enclosing def/class or assigned name — stable anchor
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline-matching key: deliberately excludes the line number so
+        unrelated edits above a justified finding do not stale the baseline."""
+        return f"{self.rule}:{self.path}:{self.symbol}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self) | {"key": self.key, "layer": "lint"}
+
+
+# ------------------------------------------------------------------ helpers --
+def _attr_chain(node: ast.AST) -> str | None:
+    """Dotted name of a Name/Attribute chain ("self._sites", "jnp.any")."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _enclosing_functions(tree: ast.Module) -> list[ast.FunctionDef | ast.AsyncFunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _call_name(call: ast.Call) -> str | None:
+    return _attr_chain(call.func)
+
+
+# ------------------------------------------------- PHI-LINT-BARRIER ---------
+# Methods whose call on a store mutates it (not a host readback).
+_WRITE_METHODS = {"setdefault", "append", "update", "clear", "add", "extend",
+                  "insert"}
+
+
+def _callback_write_targets(fn: ast.AST, tree: ast.Module,
+                            _depth: int = 0) -> set[str]:
+    """Store names a callback function writes: direct subscript/attr stores
+    plus one hop through same-module calls (``self._record_nnz`` style)."""
+    if _depth > 2:  # bounded: io_callback targets are shallow by design
+        return set()
+    targets: set[str] = set()
+    callees: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            raw = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in raw:
+                if isinstance(t, ast.Subscript):
+                    name = _attr_chain(t.value)
+                    if name:
+                        targets.add(name)
+        elif isinstance(node, ast.Call):
+            chain = _call_name(node)
+            if chain is None:
+                continue
+            head, _, tail = chain.rpartition(".")
+            if tail in _WRITE_METHODS and head:
+                targets.add(head)
+            else:
+                callees.add(chain)
+    # one resolution hop: self.method / bare function defined in this module
+    for chain in callees:
+        short = chain.split(".")[-1]
+        for g in _enclosing_functions(tree):
+            if g.name == short and g is not fn:
+                targets |= _callback_write_targets(g, tree, _depth + 1)
+    return targets
+
+
+def _check_barrier(tree: ast.Module, path: str) -> Iterator[Finding]:
+    # 1. collect io_callback targets and the stores they write. A dotted
+    # store ("self._sites") or a module-level global is matched module-wide;
+    # a bare name that is NOT a global is a closure local, so only reads
+    # inside the outermost function enclosing the io_callback can alias it —
+    # a same-named variable elsewhere is a different binding (typically the
+    # flushed return value).
+    stores: set[str] = set()
+    writer_fns: set[ast.AST] = set()
+    name_scopes: dict[str, set[int]] = {}
+    module_globals = {
+        t.id for n in tree.body
+        for t in (n.targets if isinstance(n, ast.Assign)
+                  else [n.target] if isinstance(n, (ast.AnnAssign,
+                                                    ast.AugAssign)) else [])
+        if isinstance(t, ast.Name)}
+    outer_fns = [n for n in tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))] \
+        + [m for c in tree.body if isinstance(c, ast.ClassDef)
+           for m in c.body
+           if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and (_call_name(node) or "").endswith("io_callback")
+                and node.args):
+            continue
+        scope_ids = {id(n) for outer in outer_fns
+                     if any(sub is node for sub in ast.walk(outer))
+                     for n in ast.walk(outer)}
+        cb = node.args[0]
+        fns: list[ast.AST] = []
+        if isinstance(cb, ast.Lambda):
+            fns.append(cb)
+        name = _attr_chain(cb)
+        if name:
+            short = name.split(".")[-1]
+            fns += [g for g in _enclosing_functions(tree) if g.name == short]
+        for fn in fns:
+            writer_fns.add(fn)
+            for store in _callback_write_targets(fn, tree):
+                stores.add(store)
+                if "." not in store and store not in module_globals:
+                    name_scopes.setdefault(store, set()).update(scope_ids)
+    if not stores:
+        return
+    # 2. every read of a store outside the writers needs a barrier first
+    for fn in _enclosing_functions(tree):
+        if fn in writer_fns or _callback_write_targets(fn, tree) & stores:
+            continue  # the writer itself (or its resolution hop)
+        barrier_lines = [n.lineno for n in ast.walk(fn)
+                         if isinstance(n, ast.Call)
+                         and (_call_name(n) or "").endswith("effects_barrier")]
+        # receivers of mutation calls (store.clear()) are writes, not reads
+        mutated = {c.func.value for c in ast.walk(fn)
+                   if isinstance(c, ast.Call)
+                   and isinstance(c.func, ast.Attribute)
+                   and c.func.attr in _WRITE_METHODS}
+        for node in ast.walk(fn):
+            if not (isinstance(node, (ast.Attribute, ast.Name))
+                    and isinstance(getattr(node, "ctx", None), ast.Load)):
+                continue
+            chain = _attr_chain(node)
+            if node in mutated or chain not in stores:
+                continue
+            if chain in name_scopes and id(node) not in name_scopes[chain]:
+                continue  # different binding of the same local name
+            if not any(bl < node.lineno for bl in barrier_lines):
+                yield Finding(
+                    RULE_BARRIER, path, node.lineno, f"{fn.name}:{chain}",
+                    f"`{fn.name}` reads `{chain}` (written by an io_callback) "
+                    "without a preceding jax.effects_barrier(); pending "
+                    "callbacks race the read (PR-1 bug class)")
+                break  # one finding per (function, store)
+
+
+# ----------------------------------------------- PHI-LINT-PSPEC-DUP ---------
+def _pspec_aliases(tree: ast.Module) -> set[str]:
+    """Local names bound to jax.sharding.PartitionSpec by imports."""
+    aliases = {"PartitionSpec"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and \
+                "sharding" in node.module:
+            for a in node.names:
+                if a.name == "PartitionSpec":
+                    aliases.add(a.asname or a.name)
+    return aliases
+
+
+def _check_pspec_dup(tree: ast.Module, path: str) -> Iterator[Finding]:
+    aliases = _pspec_aliases(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _call_name(node) or ""
+        if not (chain in aliases or chain.endswith(".PartitionSpec")):
+            continue
+        axes: list[str] = []
+        for arg in node.args:
+            elts = arg.elts if isinstance(arg, ast.Tuple) else [arg]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    axes.append(e.value)
+        dups = sorted({a for a in axes if axes.count(a) > 1})
+        if dups:
+            yield Finding(
+                RULE_PSPEC_DUP, path, node.lineno,
+                f"PartitionSpec({','.join(axes)})",
+                f"PartitionSpec names mesh axis {dups} more than once — XLA "
+                "rejects duplicate axes at run time, inside the pjit trace "
+                "(PR-2 bug class)")
+
+
+# ------------------------------------------------- PHI-LINT-HWCONST ---------
+# Module-level names that look like hardware constants. Matches the
+# vocabulary of core/hwconst.py plus the obvious TPU-side variants.
+_HWCONST_RE = re.compile(
+    r"^_?("
+    r"E_\w+_PJ(_B)?|\w+_GBPS|\w+_BPC|\w+_PJ_PER_\w+|FREQ|\w+_POWER_W"
+    r"|\w*_?LAUNCH_BYTES|\w*BUDGET_BYTES|PACKER_\w+|PWP_BUFFER_KB"
+    r"|MATCHER_WIDTH|DRAM_\w+|\w*PEAK_FLOPS|\w+_BW|HBM_\w+|ICI_\w+"
+    r")$")
+_HWCONST_HOME = "core/hwconst.py"
+
+
+def _is_numeric_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float))
+    if isinstance(node, ast.BinOp):
+        return _is_numeric_literal(node.left) and _is_numeric_literal(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_numeric_literal(node.operand)
+    return False
+
+
+def _check_hwconst(tree: ast.Module, path: str) -> Iterator[Finding]:
+    if path.replace("\\", "/").endswith(_HWCONST_HOME):
+        return
+    for node in tree.body:  # module level only: re-exports/locals are fine
+        targets: list[ast.expr] = []
+        value: ast.AST | None = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        for t in targets:
+            if not isinstance(t, ast.Name):
+                continue
+            if _HWCONST_RE.match(t.id) and value is not None \
+                    and _is_numeric_literal(value):
+                yield Finding(
+                    RULE_HWCONST, path, node.lineno, t.id,
+                    f"hardware constant `{t.id}` hard-coded outside "
+                    f"{_HWCONST_HOME} — import it from core.hwconst so the "
+                    "perfmodel/simulator cross-checks stay coupled")
+
+
+# ---------------------------------------------- PHI-LINT-TRACERBOOL ---------
+# jnp/jax calls that return host-side (concrete) values even on tracers.
+_CONCRETE_FNS = {"issubdtype", "isdtype", "result_type", "can_cast",
+                 "promote_types", "iinfo", "finfo", "ndim", "shape", "size"}
+_ARRAY_ROOTS = {"jnp", "jax.numpy", "lax", "jax.lax"}
+
+
+def _array_call_inside(node: ast.AST) -> ast.Call | None:
+    """First call under ``node`` that produces a traced array (jnp.*/lax.*)."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        chain = _call_name(sub) or ""
+        head, _, tail = chain.rpartition(".")
+        if head in _ARRAY_ROOTS and tail not in _CONCRETE_FNS:
+            return sub
+    return None
+
+
+def _check_tracerbool(tree: ast.Module, path: str) -> Iterator[Finding]:
+    fn_of: dict[int, str] = {}
+    for fn in _enclosing_functions(tree):
+        for sub in ast.walk(fn):
+            if hasattr(sub, "lineno"):
+                fn_of.setdefault(id(sub), fn.name)
+    for node in ast.walk(tree):
+        test: ast.AST | None = None
+        kind = None
+        if isinstance(node, (ast.If, ast.While)):
+            test, kind = node.test, type(node).__name__.lower()
+        elif isinstance(node, ast.Assert):
+            test, kind = node.test, "assert"
+        elif isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "bool" and node.args:
+            test, kind = node.args[0], "bool()"
+        if test is None:
+            continue
+        call = _array_call_inside(test)
+        if call is None:
+            continue
+        sym = fn_of.get(id(node), "<module>")
+        yield Finding(
+            RULE_TRACERBOOL, path, node.lineno,
+            f"{sym}:{_call_name(call)}",
+            f"`{kind}` on the traced array value `{_call_name(call)}(...)` — "
+            "concretizes under jit/pjit and raises "
+            "TracerBoolConversionError the first time this path is traced")
+
+
+# ------------------------------------------------------------------ driver --
+_RULES = (_check_barrier, _check_pspec_dup, _check_hwconst, _check_tracerbool)
+
+
+def lint_source(src: str, path: str) -> list[Finding]:
+    """Run every rule over one module's source. ``path`` is the stable
+    repo-relative identifier used in finding keys."""
+    tree = ast.parse(src, filename=path)
+    out: list[Finding] = []
+    for rule in _RULES:
+        out.extend(rule(tree, path))
+    return out
+
+
+def lint_paths(root: Path, rel_paths: Iterable[Path] | None = None
+               ) -> list[Finding]:
+    """Lint ``rel_paths`` (default: every ``src/repro/**/*.py``) under
+    ``root`` (the repo checkout)."""
+    if rel_paths is None:
+        rel_paths = sorted(p.relative_to(root)
+                           for p in (root / "src" / "repro").rglob("*.py"))
+    findings: list[Finding] = []
+    for rel in rel_paths:
+        findings.extend(
+            lint_source((root / rel).read_text(), rel.as_posix()))
+    return findings

@@ -61,3 +61,13 @@ E_MAC_PJ = 2.3                  # one baseline 8-bit PE MAC (Eyeriss-class)
 # Table-1 bandwidth (~1 µs of launch/teardown at 64 GB/s). Used by the
 # execution policy's cost crossover (see perfmodel.phi_coo_traffic).
 PALLAS_LAUNCH_BYTES = 64 * 1024
+
+# --------------------------------------------------------- TPU (serving) ----
+# The TPU-side constants the jax_pallas serving path is modelled against.
+# Kept here with the ASIC constants for the same reason: the execution
+# policy's VMEM gate, the roofline report and the bench baselines must all
+# read one copy (PHI-LINT-HWCONST enforces it).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # half of a 16 MiB core, Mosaic headroom
+TPU_PEAK_FLOPS = 197e12         # bf16 per chip (TPU v5e)
+TPU_HBM_BW = 819e9              # bytes/s per chip
+TPU_ICI_BW = 50e9               # bytes/s per link

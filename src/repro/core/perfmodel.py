@@ -467,7 +467,7 @@ def packer_budget_report(site_counters: dict[str, dict]) -> list["PackerBudget"]
     cap ``4·budget·block_m·K`` must cover the worst observed block, and the
     global/chunk caps (``budget·rows·K``) must cover the observed mean.
     """
-    out = []
+    out: list[PackerBudget] = []
     for site, c in sorted(site_counters.items()):
         bm, K = int(c["block_m"]), int(c["k_dim"])
         rows = max(int(c["rows"]), 1)

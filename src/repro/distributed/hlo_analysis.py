@@ -18,10 +18,11 @@ from __future__ import annotations
 import dataclasses
 import re
 
-
-PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
-HBM_BW = 819e9           # bytes/s per chip
-ICI_BW = 50e9            # bytes/s per link
+from repro.core.hwconst import (
+    TPU_HBM_BW as HBM_BW,
+    TPU_ICI_BW as ICI_BW,
+    TPU_PEAK_FLOPS as PEAK_FLOPS,
+)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -25,8 +25,8 @@ class WatchdogConfig:
 
 
 class StepWatchdog:
-    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: WatchdogConfig | None = None):
+        self.cfg = cfg if cfg is not None else WatchdogConfig()
         self.times: list[float] = []
         self.consecutive_slow = 0
         self.escalations = 0

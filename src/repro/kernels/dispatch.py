@@ -241,7 +241,8 @@ class Decision:
 class PhiExecutionPolicy:
     """Resolves ``impl`` per phi_matmul call and aggregates telemetry."""
 
-    def __init__(self, override: str | None = None, telemetry: bool = True):
+    def __init__(self, override: str | None = None,
+                 telemetry: bool = True) -> None:
         if override is None:
             override = os.environ.get("PHI_IMPL") or None
         if override is not None and override not in IMPLS:
@@ -264,7 +265,7 @@ class PhiExecutionPolicy:
         self._usage: dict[str, np.ndarray] = {}
 
     # --------------------------------------------------------------- usage --
-    def register_usage(self, site: str, usage) -> None:
+    def register_usage(self, site: str, usage: Any) -> None:
         """Attach a calibration pattern-usage histogram ((T, q+1) counts) to
         a dispatch site. Re-registration with the same shape accumulates
         (scan-over-layers call sites pool their layers' histograms)."""
@@ -282,6 +283,7 @@ class PhiExecutionPolicy:
     def runtime_shards_for(self, site: str) -> int:
         """Mesh extent recorded for ``site``'s runtime counters (1 when the
         site has only executed outside shard_map, or not at all)."""
+        jax.effects_barrier()   # flush in-flight telemetry callbacks
         with self._lock:
             return int(self._sites.get(site, {}).get("shards", 1))
 
@@ -290,6 +292,7 @@ class PhiExecutionPolicy:
         fed by the prefetch pre-pass through :meth:`_record_nnz`. None until
         the site has executed (or when every observed row-partition was
         unmatched — there is nothing to derive gather sets from)."""
+        jax.effects_barrier()   # flush in-flight telemetry callbacks
         with self._lock:
             hist = self._sites.get(site, {}).get("usage_runtime")
             if hist is None or hist[:, :-1].sum() <= 0:
@@ -300,7 +303,7 @@ class PhiExecutionPolicy:
     def resolve(self, *, site: str = "anon", m: int, k_dim: int, n: int,
                 t: int, q: int, override: str | None = None,
                 config_override: str | None = None,
-                transform: bool = False, usage=None) -> Decision:
+                transform: bool = False, usage: Any = None) -> Decision:
         """Resolve the impl for one call. Override precedence: per-call
         ``override`` > ``config_override`` (``PhiConfig.impl`` threaded by
         the model layer) > the policy-level override (``PHI_IMPL`` env).
@@ -581,7 +584,8 @@ class PhiExecutionPolicy:
         return dec
 
     def attention(self, q: jax.Array, k: jax.Array, v: jax.Array,
-                  patterns=None, *, site: str = "anon", causal: bool = False,
+                  patterns: jax.Array | None = None, *,
+                  site: str = "anon", causal: bool = False,
                   window: int | None = None, chunk: int | None = None,
                   spike_qk: bool = False, override: str | None = None,
                   config_override: str | None = None) -> jax.Array:
@@ -629,7 +633,8 @@ class PhiExecutionPolicy:
                pwp: jax.Array, *, site: str = "anon",
                override: str | None = None, config_override: str | None = None,
                nnz_budget: float = 0.08,
-               gather_dtype=None, pwp_scale=None, usage=None) -> jax.Array:
+               gather_dtype: Any = None, pwp_scale: jax.Array | None = None,
+               usage: Any = None) -> jax.Array:
         """Policy-dispatched ``phi_matmul``: resolve the impl from context,
         run it, and (fused path) stream the l2_nnz audit counters out.
 
@@ -714,9 +719,10 @@ class PhiExecutionPolicy:
         return out
 
     def _record_nnz(self, site: str, block_m: int, k_dim: int, rows: int,
-                    nnz, group_t: int = 0,
+                    nnz: Any, group_t: int = 0,
                     usage_ratio: float | None = None,
-                    match_hist=None, shards: int | None = None) -> None:
+                    match_hist: Any = None,
+                    shards: int | None = None) -> None:
         nnz = np.asarray(nnz)
         with self._lock:
             c = self._sites.setdefault(site, {
@@ -763,6 +769,10 @@ class PhiExecutionPolicy:
         """Dispatch counts + the perfmodel packer-budget view of the
         aggregated fused-kernel l2_nnz counters."""
         from repro.core.perfmodel import packer_budget_report
+        # The l2_nnz counters arrive through unordered io_callbacks; flush
+        # them or a report taken right after a step under-counts (the PR-1
+        # calibration race, caught by PHI-LINT-BARRIER).
+        jax.effects_barrier()
         with self._lock:
             decisions = dict(self._decisions)
             sites = {k: dict(v) for k, v in self._sites.items()}
@@ -790,7 +800,7 @@ class PhiExecutionPolicy:
 
 
 # ------------------------------------------------------ per-shard usage ------
-def shard_usage_histogram(usage, shards: int):
+def shard_usage_histogram(usage: Any, shards: int) -> np.ndarray | None:
     """Per-shard view of a (T, q+1) pattern-usage histogram for a call whose
     K axis is split ``shards``-ways under shard_map (row-parallel).
 
@@ -827,14 +837,17 @@ def set_policy(policy: PhiExecutionPolicy) -> PhiExecutionPolicy:
     return prev
 
 
-def phi_matmul(a, w, patterns, pwp, **kwargs) -> jax.Array:
+def phi_matmul(a: jax.Array, w: jax.Array, patterns: jax.Array,
+               pwp: jax.Array, **kwargs: Any) -> jax.Array:
     """Module-level shorthand: policy-dispatched Phi matmul. Accepts the
     same keywords as :meth:`PhiExecutionPolicy.matmul` (``site``,
     ``override``, ``nnz_budget``, ``gather_dtype``, ``pwp_scale``)."""
     return _default_policy.matmul(a, w, patterns, pwp, **kwargs)
 
 
-def phi_flash_attention(q, k, v, patterns=None, **kwargs) -> jax.Array:
+def phi_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        patterns: jax.Array | None = None,
+                        **kwargs: Any) -> jax.Array:
     """Module-level shorthand: policy-dispatched flash attention. Accepts
     the same keywords as :meth:`PhiExecutionPolicy.attention` (``site``,
     ``causal``/``window``/``chunk``, ``spike_qk``, ``override``)."""
@@ -842,7 +855,7 @@ def phi_flash_attention(q, k, v, patterns=None, **kwargs) -> jax.Array:
 
 
 # -------------------------------------------------- checkpoint persistence ---
-def checkpoint_extra(cfg) -> dict:
+def checkpoint_extra(cfg: Any) -> dict:
     """Policy-relevant config to persist in a checkpoint's ``extra`` dict."""
     phi = getattr(cfg, "phi", None)
     if phi is not None and getattr(phi, "impl", None) is not None:
@@ -850,7 +863,7 @@ def checkpoint_extra(cfg) -> dict:
     return {}
 
 
-def apply_checkpoint_extra(cfg, extra: dict | None):
+def apply_checkpoint_extra(cfg: Any, extra: dict | None) -> Any:
     """Re-apply a persisted impl override onto a restored config. A live
     override (CLI/config) wins over the checkpointed one."""
     impl = (extra or {}).get(_CKPT_KEY)
@@ -881,7 +894,7 @@ def usage_from_checkpoint_extra(extra: dict | None) -> dict:
     return {name: np.asarray(v, np.int64) for name, v in raw.items()}
 
 
-def register_usage_from_params(params, prefix: str = "lm") -> int:
+def register_usage_from_params(params: Any, prefix: str = "lm") -> int:
     """Walk a calibrated LM param tree and (re-)register every ``phi_*``
     usage histogram with the default policy under its dispatch site name
     (``f"{prefix}.{weight}"``). Used after a checkpoint restore, where the
@@ -891,7 +904,7 @@ def register_usage_from_params(params, prefix: str = "lm") -> int:
     pol = get_policy()
     count = 0
 
-    def walk(node) -> None:
+    def walk(node: Any) -> None:
         nonlocal count
         if not isinstance(node, dict):
             return

@@ -14,10 +14,15 @@ Responsibilities:
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Single source of truth in core.hwconst (PHI-LINT-HWCONST): the policy's
+# VMEM gate and the perf stories must read one copy of the budget.
+from repro.core.hwconst import VMEM_BUDGET_BYTES as _VMEM_BUDGET_BYTES
 from repro.core.patterns import PhiConfig, pattern_weight_products  # noqa: F401 (re-export)
 from repro.kernels import ref
 from repro.kernels.lif import lif_pallas
@@ -43,7 +48,7 @@ def effective_block_m(M: int, block_m: int) -> int:
     return min(block_m, max(8, 1 << (M - 1).bit_length()))
 
 
-def _pad_rows(x: jax.Array, mult: int, fill=0) -> jax.Array:
+def _pad_rows(x: jax.Array, mult: int, fill: int = 0) -> jax.Array:
     m = x.shape[0]
     pad = (-m) % mult
     if pad == 0:
@@ -66,7 +71,8 @@ def _pick_block_n(N: int, block_n: int) -> int:
 
 
 # ---------------------------------------------------------------- matcher ---
-def matcher(a: jax.Array, patterns: jax.Array, *, block_m: int = 256):
+def matcher(a: jax.Array, patterns: jax.Array, *,
+            block_m: int = 256) -> tuple[jax.Array, jax.Array]:
     """Pattern match: a (..., K) binary, patterns (T, q, k) -> (idx, residual)."""
     lead = a.shape[:-1]
     K = a.shape[-1]
@@ -81,7 +87,7 @@ def matcher(a: jax.Array, patterns: jax.Array, *, block_m: int = 256):
 
 # -------------------------------------------------------------- L1 gather ---
 def l1_gather(idx: jax.Array, pwp: jax.Array, *, block_m: int = 256, block_n: int = 256,
-              mode: str = "mxu"):
+              mode: str = "mxu") -> jax.Array:
     """idx (..., T) -> (..., N) sum of PWP rows."""
     lead = idx.shape[:-1]
     T = idx.shape[-1]
@@ -99,7 +105,7 @@ def l1_gather(idx: jax.Array, pwp: jax.Array, *, block_m: int = 256, block_n: in
 
 # ---------------------------------------------------------------- L2 spmm ---
 def bucket_coo(rows: jax.Array, cols: jax.Array, signs: jax.Array, m: int,
-               block_m: int, cap: int):
+               block_m: int, cap: int) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Bucket row-sorted padded COO into per-M-block packs.
 
     rows must be ascending (sentinel == m last), as produced by
@@ -195,7 +201,7 @@ def phi_l2_audit(a: jax.Array, patterns: jax.Array, *, nnz_budget: float = 0.08,
 
 def l2_spmm(rows: jax.Array, cols: jax.Array, signs: jax.Array, w: jax.Array,
             m: int, *, block_m: int = 256, block_n: int = 256, cap: int | None = None,
-            mode: str = "take"):
+            mode: str = "take") -> jax.Array:
     """Padded COO (sentinel row == m) × w (K, N) -> (m, N) f32."""
     K, N = w.shape
     bm = effective_block_m(m, block_m)
@@ -211,7 +217,8 @@ def l2_spmm(rows: jax.Array, cols: jax.Array, signs: jax.Array, w: jax.Array,
 
 # -------------------------------------------------------------------- LIF ---
 def lif_step(v: jax.Array, x: jax.Array, *, decay: float = 0.5, threshold: float = 1.0,
-             reset: str = "hard", use_pallas: bool = True):
+             reset: str = "hard",
+             use_pallas: bool = True) -> tuple[jax.Array, jax.Array]:
     """LIF update on arbitrary-shape tensors; returns (spike, v')."""
     if not use_pallas:
         return ref.lif_ref(v, x, decay, threshold, reset)
@@ -240,9 +247,6 @@ def lif_step(v: jax.Array, x: jax.Array, *, decay: float = 0.5, threshold: float
 # almost always choose anyway: the largest blocks that keep the per-program
 # working set under the VMEM budget.
 _FUSED_TUNE_CACHE: dict[tuple, tuple[int, int]] = {}
-_VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a 16 MiB core, headroom for Mosaic
-
-
 def _fused_vmem_bytes(bm: int, bn: int, K: int, T: int, q: int) -> int:
     """Per-program f32 working set of the fused kernel (see phi_fused.py)."""
     return 4 * (bm * K              # activation block
@@ -290,7 +294,7 @@ def _prefetch_vmem_bytes(bm: int, bn: int, K: int, T: int, q: int,
 
 
 def fused_shape_viable(M: int, K: int, N: int, T: int, q: int,
-                       usage=None, p_active: int | None = None) -> str:
+                       usage: Any = None, p_active: int | None = None) -> str:
     """Shape gate for the execution policy: which fused lowering (if any)
     fits the VMEM budget for this shape.
 
@@ -580,7 +584,7 @@ def autotune_attn_blocks(S: int, D: int, T: int, qp: int,
 
 
 def phi_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                        patterns, *, causal: bool = False,
+                        patterns: jax.Array | None, *, causal: bool = False,
                         window: int | None = None, chunk: int | None = None,
                         block_q: int | None = None,
                         block_kv: int | None = None,
@@ -624,7 +628,8 @@ def phi_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def _fused_prologue(a2: jax.Array, pwp: jax.Array,
                     pwp_scale: jax.Array | None, T: int, q: int, N: int,
-                    block_m: int, block_n: int):
+                    block_m: int, block_n: int) -> tuple[
+        jax.Array, jax.Array, jax.Array | None, int, int, int]:
     """Shared prologue of the fused wrappers: clamp/pad the row blocks,
     pick the N tiling, and default the PWP dequant scales. The bm·K bound
     keeps the kernels' int32 ``l2_nnz`` audit counter exact (a block holds
@@ -711,7 +716,8 @@ def phi_fused_stream(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
 
 
 def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
-                       w: jax.Array, *, usage=None, p_active: int | None = None,
+                       w: jax.Array, *, usage: Any = None,
+                       p_active: int | None = None,
                        pwp_scale: jax.Array | None = None,
                        block_m: int | None = None, block_n: int | None = None,
                        runtime_sets: jax.Array | None = None,
@@ -792,13 +798,11 @@ def phi_fused_prefetch(a: jax.Array, patterns: jax.Array, pwp: jax.Array,
 
 
 # -------------------------------------------------------- pjit-scale path ---
-def _phi_matmul_coo_chunked(a2, w, patterns, pwp, nnz_budget: float,
+def _phi_matmul_coo_chunked(a2: jax.Array, w: jax.Array, patterns: jax.Array,
+                            pwp: jax.Array, nnz_budget: float,
                             chunk_rows: int | None = None, entry_block: int = 8192,
-                            gather_dtype=None, pwp_scale=None):
-    import os as _os
-    if chunk_rows is None:
-        chunk_rows = int(_os.environ.get("PHI_CHUNK_ROWS", "2048"))
-    gather_dtype = gather_dtype or jnp.float32
+                            gather_dtype: Any = None,
+                            pwp_scale: jax.Array | None = None) -> jax.Array:
     """Scalable pure-XLA Phi matmul: row-chunked (K-first hardware tiling).
 
     Per chunk of ≤``chunk_rows`` rows:
@@ -809,6 +813,11 @@ def _phi_matmul_coo_chunked(a2, w, patterns, pwp, nnz_budget: float,
     This is the lowering used inside pjit graphs at 32k-prefill scale, where
     the flat formulation overflows int32 and the dense gather wouldn't fit.
     """
+    import os as _os
+
+    if chunk_rows is None:
+        chunk_rows = int(_os.environ.get("PHI_CHUNK_ROWS", "2048"))
+    gather_dtype = gather_dtype or jnp.float32
     from repro.core.assign import assign_patterns, pack_l2_coo_jit
 
     M, K = a2.shape
@@ -871,9 +880,9 @@ def phi_matmul(
     block_m: int | None = None,   # None: autotune (fused) / 256 (pallas)
     block_n: int | None = None,
     group_t: int | None = None,   # fused_stream K-group depth (None: autotune)
-    gather_dtype=None,
-    pwp_scale=None,
-    usage=None,                   # fused_prefetch: (T, q+1) usage histogram
+    gather_dtype: Any = None,
+    pwp_scale: jax.Array | None = None,
+    usage: Any = None,                   # fused_prefetch: (T, q+1) usage histogram
     p_active: int | None = None,  # fused_prefetch: explicit gather size
 ) -> jax.Array:
     """Full Phi sparse matmul: a (..., K) binary × w (K, N) -> (..., N) f32.

@@ -64,7 +64,7 @@ def test_checkpoint_roundtrip_and_gc():
         mgr = CheckpointManager(d, keep=2, async_save=False)
         tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
         for step in (1, 2, 3, 4):
-            mgr.save(step, jax.tree.map(lambda x: x * step, tree), {"s": step})
+            mgr.save(step, jax.tree.map(lambda x, s=step: x * s, tree), {"s": step})
         assert mgr.all_steps() == [3, 4]  # keep-2 GC
         step, got, extra = mgr.restore_latest(tree)
         assert step == 4 and extra["s"] == 4
