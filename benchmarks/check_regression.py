@@ -1,4 +1,4 @@
-"""CI bench-regression gate over BENCH_kernels.json / BENCH_sim.json.
+"""CI bench-regression gate over BENCH_kernels/BENCH_sim/BENCH_serve.json.
 
 Compares a freshly generated bench file against its committed baseline
 (``benchmarks/baseline/BENCH_*.json``) on the *deterministic* columns
@@ -18,7 +18,15 @@ only — the ones that are pure functions of the code, not of runner load:
     simulator's sections (``benchmarks/sim_bench.py``): cycle counts,
     energy, DRAM bytes and cross-check error may not grow; speedup /
     energy-efficiency ratios may not shrink. The simulator is seeded-numpy
-    deterministic, so these gate *exactly* the Table-2-class claims.
+    deterministic, so these gate *exactly* the Table-2-class claims;
+  * ``serve`` + ``scheduler_decisions`` (serving) — the serving engine's
+    bench (``benchmarks/serve_bench.py``): cache byte counts and pool
+    fractions may not grow, cache-saving and throughput-per-tick ratios
+    may not shrink, and the telemetry scheduler's decision counts must
+    match **exactly** in both directions — a silently flipped scheduling
+    decision is the same regression class as a flipped dispatch decision.
+    Wall-clock latency columns (``p50_ms``/``p99_ms``/``requests_per_s``)
+    match no gated class and are ignored.
 
 Wall-time columns (``us_per_call``/``per_impl_us``) are deliberately
 ignored — they are noise on shared CI runners; the HBM model and the
@@ -54,6 +62,11 @@ _HIGHER_BETTER = ("ratio", "phi_attn_ratio")
 _SIM_HIGHER = ("speedup", "eff", "gops", "gop_per_j")
 _SIM_LOWER = ("cycles", "energy", "bytes", "err", "frac")
 
+# Serving-section column classes (BENCH_serve.json), matched by substring.
+# Wall-clock columns are named to match neither class on purpose.
+_SERVE_HIGHER = ("ratio", "per_tick")
+_SERVE_LOWER = ("bytes", "frac", "preempt")
+
 
 def _load(path: str) -> dict:
     try:
@@ -84,6 +97,47 @@ def _sim_class(col: str) -> str | None:
     return None
 
 
+def _serve_class(col: str) -> str | None:
+    """Classify a serve-section column: "higher", "lower" or None."""
+    for sub in _SERVE_HIGHER:
+        if sub in col:
+            return "higher"
+    for sub in _SERVE_LOWER:
+        if sub in col:
+            return "lower"
+    return None
+
+
+def _compare_sections(base: dict, cur: dict, label: str, classify,
+                      rtol: float, errs: list[str]) -> None:
+    """Gate one section->columns dict by a column classifier (shared by the
+    ``sim`` and ``serve`` payload sections)."""
+    for tag, base_cols in sorted(base.items()):
+        cur_cols = cur.get(tag)
+        if cur_cols is None:
+            errs.append(f"{label}[{tag}]: missing from current run")
+            continue
+        for col, base_v in sorted(base_cols.items()):
+            if not isinstance(base_v, (int, float)) or isinstance(base_v, bool):
+                continue
+            cls = classify(col)
+            if cls is None:
+                continue
+            cur_v = cur_cols.get(col)
+            if not isinstance(cur_v, (int, float)):
+                errs.append(f"{label}[{tag}][{col}]: missing/non-numeric in "
+                            f"current run")
+            elif cls == "higher" and cur_v < base_v * (1.0 - rtol):
+                errs.append(f"{label}[{tag}][{col}]: ratio shrank "
+                            f"{base_v:.4g} -> {cur_v:.4g}")
+            elif cls == "lower" and cur_v > base_v * (1.0 + rtol) + 1e-12:
+                errs.append(f"{label}[{tag}][{col}]: grew "
+                            f"{base_v:.4g} -> {cur_v:.4g}")
+    for tag in sorted(set(cur) - set(base)):
+        errs.append(f"{label}[{tag}]: new in current run — regenerate the "
+                    f"baseline to cover it")
+
+
 def compare(baseline: dict, current: dict, rtol: float) -> list[str]:
     """Returns a list of human-readable regression descriptions (empty =
     pass)."""
@@ -94,32 +148,25 @@ def compare(baseline: dict, current: dict, rtol: float) -> list[str]:
                         f"current {current.get(key)!r} (intentional? "
                         f"regenerate the baseline in this PR)")
 
-    base_sim = baseline.get("sim", {})
-    cur_sim = current.get("sim", {})
-    for tag, base_cols in sorted(base_sim.items()):
-        cur_cols = cur_sim.get(tag)
-        if cur_cols is None:
-            errs.append(f"sim[{tag}]: missing from current run")
-            continue
-        for col, base_v in sorted(base_cols.items()):
-            if not isinstance(base_v, (int, float)) or isinstance(base_v, bool):
-                continue
-            cls = _sim_class(col)
-            if cls is None:
-                continue
-            cur_v = cur_cols.get(col)
-            if not isinstance(cur_v, (int, float)):
-                errs.append(f"sim[{tag}][{col}]: missing/non-numeric in "
-                            f"current run")
-            elif cls == "higher" and cur_v < base_v * (1.0 - rtol):
-                errs.append(f"sim[{tag}][{col}]: ratio shrank "
-                            f"{base_v:.4g} -> {cur_v:.4g}")
-            elif cls == "lower" and cur_v > base_v * (1.0 + rtol) + 1e-12:
-                errs.append(f"sim[{tag}][{col}]: grew "
-                            f"{base_v:.4g} -> {cur_v:.4g}")
-    for tag in sorted(set(cur_sim) - set(base_sim)):
-        errs.append(f"sim[{tag}]: new in current run — regenerate the "
-                    f"baseline to cover it")
+    _compare_sections(baseline.get("sim", {}), current.get("sim", {}),
+                      "sim", _sim_class, rtol, errs)
+    _compare_sections(baseline.get("serve", {}), current.get("serve", {}),
+                      "serve", _serve_class, rtol, errs)
+
+    base_sched = baseline.get("scheduler_decisions", {})
+    cur_sched = current.get("scheduler_decisions", {})
+    for kind, n in sorted(base_sched.items()):
+        got = cur_sched.get(kind)
+        if got is None:
+            errs.append(f"scheduler[{kind}]: decision kind disappeared "
+                        f"(baseline counted {n})")
+        elif got != n:
+            errs.append(f"scheduler[{kind}]: decision count changed "
+                        f"{n} -> {got}")
+    for kind in sorted(set(cur_sched) - set(base_sched)):
+        errs.append(f"scheduler[{kind}]: new decision kind (counted "
+                    f"{cur_sched[kind]}) — regenerate the baseline to "
+                    f"cover it")
 
     base_hbm = baseline.get("hbm_model_bytes", {})
     cur_hbm = current.get("hbm_model_bytes", {})
@@ -202,9 +249,14 @@ def main(argv: list[str] | None = None) -> int:
     n_sim = sum(sum(1 for c in v if _sim_class(c) is not None
                     and isinstance(v[c], (int, float)))
                 for v in baseline.get("sim", {}).values())
+    n_serve = sum(sum(1 for c in v if _serve_class(c) is not None
+                      and isinstance(v[c], (int, float)))
+                  for v in baseline.get("serve", {}).values())
     print(f"bench regression gate: OK ({n_cols} modelled-byte columns, "
-          f"{n_sim} sim columns, {len(_decisions(baseline))} dispatch "
-          f"sites)")
+          f"{n_sim} sim columns, {n_serve} serve columns, "
+          f"{len(_decisions(baseline))} dispatch sites, "
+          f"{len(baseline.get('scheduler_decisions', {}))} scheduler "
+          f"decision kinds)")
     return 0
 
 

@@ -64,6 +64,8 @@ PAPER_PHI = (26.70, 55.41)      # Phi's own reported ratios (Table 2)
 
 @dataclasses.dataclass(frozen=True)
 class GemmShape:
+    """One GEMM problem: (M, K) activations against a (K, N) weight."""
+
     m: int
     k: int
     n: int
@@ -71,6 +73,8 @@ class GemmShape:
 
 @dataclasses.dataclass
 class LayerPerf:
+    """Per-layer cycle/traffic ledger from the accelerator cycle model."""
+
     cycles: float
     ops: float                  # bit-sparsity OPs (paper metric)
     dram_bytes: float
@@ -124,6 +128,8 @@ def eyeriss_layer(shape: GemmShape, st: PhiStats, bytes_per_el: int = 1,
 
 
 def summarize(layers: list[LayerPerf], core_power: float = CORE_POWER_W) -> dict:
+    """Aggregate per-layer ledgers into network totals (cycles, GOPS,
+    DRAM GB, energy) at the modelled clock and power."""
     cycles = sum(lp.cycles for lp in layers)
     ops = sum(lp.ops for lp in layers)
     dram = sum(lp.dram_bytes for lp in layers)
@@ -182,6 +188,7 @@ class KernelTraffic:
 
     @property
     def total(self) -> float:
+        """Sum of every per-stream byte count (the gated headline number)."""
         return (self.a_bytes + self.patterns_bytes + self.pwp_bytes
                 + self.w_bytes + self.idx_bytes + self.residual_bytes
                 + self.coo_bytes + self.out_bytes)
@@ -493,3 +500,33 @@ def vgg16_gemm_shapes(img: int = 32, classes: int = 100) -> list[GemmShape]:
     shapes = [GemmShape(s * s, 9 * cin, cout) for (cout, cin), s in zip(cfg, sizes)]
     shapes += [GemmShape(1, 512, classes)]
     return shapes
+
+
+# --------------------------------------------------------------------------
+# Serving-cache byte models.
+#
+# The paged serving engine (repro.serve.engine, paged=True) reports its
+# decode-cache footprint; these two closed forms are the model it is checked
+# against in benchmarks/serve_bench.py. A contiguous engine reserves
+# slots x max_context key/value rows per scan step up front; a paged pool
+# holds num_pages fixed-size pages (plus one scratch page for inactive
+# lanes) and only the high-water mark of pages ever backs real tokens.
+
+def kv_cache_bytes(*, n_scan: int, slots: int, context: int,
+                   kv_heads: int, head_dim: int,
+                   dtype_bytes: int = 4) -> int:
+    """Bytes of a contiguous decode KV cache.
+
+    ``n_scan`` is the number of scanned layer groups (each holding one K and
+    one V leaf of shape ``(slots, context, kv_heads, head_dim)``).
+    """
+    per_leaf = slots * context * kv_heads * head_dim * dtype_bytes
+    return 2 * n_scan * per_leaf
+
+
+def paged_pool_bytes(*, n_scan: int, num_pages: int, page_size: int,
+                     kv_heads: int, head_dim: int,
+                     dtype_bytes: int = 4) -> int:
+    """Bytes of a paged decode KV pool (includes the +1 scratch page)."""
+    per_leaf = (num_pages + 1) * page_size * kv_heads * head_dim * dtype_bytes
+    return 2 * n_scan * per_leaf

@@ -196,6 +196,8 @@ def autodiff_region():
 
 
 def in_autodiff_region() -> bool:
+    """True inside an ``autodiff_region`` context (grad/vjp tracing): the
+    Pallas lowerings define no VJP, so the policy must pick an XLA path."""
     return bool(getattr(_tls, "autodiff", 0))
 
 
@@ -277,6 +279,8 @@ class PhiExecutionPolicy:
             self._usage[site] = u
 
     def usage_for(self, site: str) -> np.ndarray | None:
+        """The calibration pattern-usage histogram registered for ``site``
+        ((T, q+1) int64 counts), or None if never calibrated."""
         with self._lock:
             return self._usage.get(site)
 
@@ -298,6 +302,53 @@ class PhiExecutionPolicy:
             if hist is None or hist[:, :-1].sum() <= 0:
                 return None
             return hist.copy()
+
+    def site_telemetry(self, prefix: str = "") -> list[dict]:
+        """Scheduler-facing snapshot of every registered dispatch site.
+
+        One row per site whose name starts with ``prefix``, each carrying
+        the signals the serve scheduler scores on (``serve/scheduler.py``):
+
+        * ``usage_ratio`` / ``p_active`` — calibration-histogram skew
+          (``patterns.active_pattern_sets``): a low ratio means the site
+          streams a small active slice of its PWP bank, i.e. the
+          ``fused_prefetch`` path pays off and co-batched traffic shares
+          the gathered rows;
+        * ``warm`` / ``executions`` — whether the site has executed (a cold
+          site's first trace pays the pre-pass; later traces reuse its
+          runtime sets), and how often;
+        * ``impl`` / ``reason`` — the most recent resolved Decision, if any.
+
+        Sites come from both the calibration registry (:meth:`register_usage`)
+        and the runtime counters (:meth:`_record_nnz`), so the view covers
+        calibrated-but-never-run sites too.
+        """
+        jax.effects_barrier()   # flush in-flight telemetry callbacks
+        from repro.core.patterns import active_pattern_sets
+        rows: list[dict] = []
+        with self._lock:
+            names = sorted(set(self._usage) | set(self._sites))
+            for site in names:
+                if prefix and not site.startswith(prefix):
+                    continue
+                usage = self._usage.get(site)
+                sets, ratio = (active_pattern_sets(usage)
+                               if usage is not None else (None, 1.0))
+                counters = self._sites.get(site)
+                execs = 0 if counters is None else int(
+                    counters.get("executions", 0))
+                last = self._last.get(site)
+                rows.append({
+                    "site": site,
+                    "usage_ratio": float(ratio),
+                    "p_active": None if sets is None else int(sets.shape[-1]),
+                    "skewed": sets is not None,
+                    "warm": execs > 0,
+                    "executions": execs,
+                    "impl": None if last is None else last.impl,
+                    "reason": None if last is None else last.reason,
+                })
+        return rows
 
     # ------------------------------------------------------------- resolve --
     def resolve(self, *, site: str = "anon", m: int, k_dim: int, n: int,
@@ -756,6 +807,8 @@ class PhiExecutionPolicy:
 
     # ----------------------------------------------------------- reporting --
     def decisions(self) -> dict[tuple[str, str, str], int]:
+        """Trace counts keyed by (site, impl, reason) — decisions happen at
+        trace time, so under jit caching these count traces, not steps."""
         with self._lock:
             return dict(self._decisions)
 
@@ -780,6 +833,7 @@ class PhiExecutionPolicy:
                 "packer_budgets": packer_budget_report(sites)}
 
     def log_report(self, prefix: str = "phi") -> None:
+        """Log :meth:`report` (dispatch counts + packer budgets) at INFO."""
         rep = self.report()
         for (site, impl, reason), count in sorted(rep["decisions"].items()):
             log.info("%s dispatch: %-28s -> %-6s %-28s %d trace(s)",
@@ -792,6 +846,7 @@ class PhiExecutionPolicy:
                      b.nnz_budget_required)
 
     def reset(self) -> None:
+        """Clear all telemetry: decisions, runtime counters, usage registry."""
         with self._lock:
             self._decisions.clear()
             self._last.clear()
@@ -828,10 +883,13 @@ _default_policy = PhiExecutionPolicy()
 
 
 def get_policy() -> PhiExecutionPolicy:
+    """The process-wide execution policy every call site dispatches through."""
     return _default_policy
 
 
 def set_policy(policy: PhiExecutionPolicy) -> PhiExecutionPolicy:
+    """Swap the process-wide policy; returns the previous one (tests use
+    this to install a fresh policy and restore the old)."""
     global _default_policy
     prev, _default_policy = _default_policy, policy
     return prev
@@ -904,7 +962,7 @@ def register_usage_from_params(params: Any, prefix: str = "lm") -> int:
     pol = get_policy()
     count = 0
 
-    def walk(node: Any) -> None:
+    def _walk(node: Any) -> None:
         nonlocal count
         if not isinstance(node, dict):
             return
@@ -919,7 +977,7 @@ def register_usage_from_params(params: Any, prefix: str = "lm") -> int:
                         pol.register_usage(f"{prefix}.{key[4:]}", u)
                         count += 1
             elif isinstance(val, dict):
-                walk(val)
+                _walk(val)
 
-    walk(params)
+    _walk(params)
     return count

@@ -396,14 +396,14 @@ def autotune_fused_blocks(M: int, K: int, N: int, q: int, T: int,
         w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
         timed = []
         for bm, bn in cands:
-            def fn(bm=bm, bn=bn):
+            def _fn(bm=bm, bn=bn):
                 return phi_fused_pallas(a[:bm], pats, pwp, scale, w,
                                         block_m=bm, block_n=bn,
                                         interpret=_interpret())
 
-            jax.block_until_ready(fn())           # compile
+            jax.block_until_ready(_fn())           # compile
             t0 = time.perf_counter()
-            jax.block_until_ready(fn())
+            jax.block_until_ready(_fn())
             timed.append((time.perf_counter() - t0, (bm, bn)))
         best = min(timed)[1]
     _FUSED_TUNE_CACHE[key] = best
@@ -453,15 +453,15 @@ def autotune_stream_blocks(M: int, K: int, N: int, q: int, T: int,
         w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
         timed = []
         for bm, bn, gt in cands:
-            def fn(bm=bm, bn=bn, gt=gt):
+            def _fn(bm=bm, bn=bn, gt=gt):
                 return phi_fused_stream_pallas(a[:bm], pats, pwp, scale, w,
                                                block_m=bm, block_n=bn,
                                                group_t=gt,
                                                interpret=_interpret())
 
-            jax.block_until_ready(fn())           # compile
+            jax.block_until_ready(_fn())           # compile
             t0 = time.perf_counter()
-            jax.block_until_ready(fn())
+            jax.block_until_ready(_fn())
             timed.append((time.perf_counter() - t0, (bm, bn, gt)))
         best = min(timed)[1]
     _STREAM_TUNE_CACHE[key] = best
@@ -512,14 +512,14 @@ def autotune_prefetch_blocks(M: int, K: int, N: int, q: int, T: int,
                 jnp.arange(p_active, dtype=jnp.int32)[None, None],
                 (1, T, p_active))
 
-            def run(bm=bm, bn=bn, active=active):
+            def _run(bm=bm, bn=bn, active=active):
                 return phi_fused_prefetch_pallas(
                     a[:bm], pats, pwp, scale, w, active,
                     block_m=bm, block_n=bn, interpret=_interpret())
 
-            jax.block_until_ready(run())          # compile
+            jax.block_until_ready(_run())          # compile
             t0 = time.perf_counter()
-            jax.block_until_ready(run())
+            jax.block_until_ready(_run())
             timed.append((time.perf_counter() - t0, (bm, bn)))
         best = min(timed)[1]
     _PREFETCH_TUNE_CACHE[key] = best

@@ -59,6 +59,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-context", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from a paged KV cache (fixed-size pages + "
+                         "page-table indirection; bitwise-identical decode)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="physical page-pool size; undersizing it forces "
+                         "scheduler preemption (default: worst case, "
+                         "slots * max_context / page_size)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N virtual CPU devices for off-TPU mesh "
@@ -110,7 +119,9 @@ def main() -> None:
                          ("data", "model"))
         log.info("serving on %s", dict(mesh.shape))
     eng = Engine(cfg, params, batch_slots=args.slots,
-                 max_context=args.max_context, mesh=mesh)
+                 max_context=args.max_context, mesh=mesh,
+                 paged=args.paged, page_size=args.page_size,
+                 num_pages=args.pages)
     rng = np.random.default_rng(0)
     t_sub = time.time()
     for rid in range(args.requests):
@@ -125,6 +136,15 @@ def main() -> None:
              len(results), args.requests, eng.decoded_tokens, dt,
              eng.decoded_tokens / max(dt, 1e-9), eng.ticks,
              100.0 * eng.decoded_tokens / max(eng.ticks * args.slots, 1))
+    rep = eng.serve_report()
+    log.info("scheduler decisions: %s", rep["scheduler_decisions"])
+    cache = rep["cache"]
+    if rep["paged"]:
+        log.info("paged cache: %d pages x %d tokens, hwm %d pages "
+                 "(%d bytes) vs contiguous %d bytes",
+                 cache["num_pages"], cache["page_size"],
+                 cache["hwm_pages"], cache["page_hwm_bytes"],
+                 cache["contig_cache_bytes"])
 
 
 if __name__ == "__main__":

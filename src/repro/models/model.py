@@ -542,6 +542,26 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos: jax.Array
     return logits[:, 0], new_caches
 
 
+def decode_step_paged(cfg: ModelConfig, params: dict, token: jax.Array,
+                      pos: jax.Array, pools: Any, page_table: jax.Array):
+    """One-token decode against a paged KV cache.
+
+    Identical to ``decode_step`` except the attention caches are the shared
+    page pools from ``init_paged_state`` plus the engine's page table
+    ((B, logical_pages) int32, -1 = unmapped) — see
+    ``serve/page_manager.py`` for the layout and the bitwise-exactness
+    contract. Full-attention families only (gated in
+    ``transformer.stack_decode_paged``).
+    """
+    x = params["embed"][token][:, None].astype(cfg.compute_dtype)
+    x = shard(x, "batch", None, "act_embed")
+    mm = make_matmul(cfg)
+    x, new_pools = transformer.stack_decode_paged(
+        cfg, params["decoder"], x, pos, pools, page_table, matmul=mm)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_pools
+
+
 # ----------------------------------------------------------- input specs ---
 def input_batch_specs(cfg: ModelConfig, batch: int, seq: int, with_labels: bool,
                       dtype=jnp.int32) -> dict:
@@ -619,4 +639,31 @@ def init_decode_state(cfg: ModelConfig, batch: int, context: int) -> Any:
     """Concrete zero-initialised decode state (serving engine cold start)."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                         decode_state_specs(cfg, batch, context),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def paged_state_specs(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
+    """ShapeDtypeStruct tree of the shared page pools: every KV leaf's
+    (batch, seq) axes become (num_pages + 1, page_size) — one pool shared by
+    all slots, plus the reserved scratch page (see
+    ``serve/page_manager.py``). Derived from ``decode_state_specs`` at
+    batch=1/context=page_size so layout can never drift from prefill's."""
+    if cfg.family in ("ssm", "hybrid") or cfg.attn_type != "full":
+        raise ValueError(
+            f"paged state supports full-attention families only, not "
+            f"family={cfg.family!r} attn_type={cfg.attn_type!r}")
+    specs = decode_state_specs(cfg, 1, page_size)
+
+    def mk(s):
+        shape = (s.shape[0], num_pages + 1) + s.shape[2:]
+        return jax.ShapeDtypeStruct(shape, s.dtype)
+
+    return jax.tree.map(mk, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def init_paged_state(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
+    """Concrete zero-initialised page pools (paged serving cold start)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_state_specs(cfg, num_pages, page_size),
                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -205,6 +205,53 @@ def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
     return x, (k_cache, v_cache)
 
 
+def attn_block_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                            pos: jax.Array, kv: tuple[jax.Array, jax.Array],
+                            page_table: jax.Array, matmul=None, lora=None):
+    """One-token decode against a *paged* KV cache (full attention only).
+
+    x (B,1,D); pos (B,) int32; kv pools (P+1, page_size, Hkv, hd) — the last
+    physical page is the scratch target for unmapped lanes; page_table
+    (B, Lp) int32 maps logical page -> physical pool page, -1 = unmapped.
+
+    Writes scatter the new K/V row through the table
+    (``pool[table[b, pos // ps], pos % ps]``); reads gather every logical
+    page back into a (B, Lp*ps, Hkv, hd) view that is shape-identical to the
+    contiguous cache, so the unchanged ``ll.attention_decode`` masks it
+    exactly as before. Unmapped logical pages are clamped to physical page 0
+    in the view — every position they cover satisfies ``kpos > pos`` and is
+    masked to an exact zero by the softmax, which is what makes paged decode
+    bitwise identical to contiguous decode (see ``serve/page_manager.py``).
+    """
+    mm = matmul or ll.default_mm
+    h = ll.apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p, h, pos[:, None], matmul, lora)
+    k_pool, v_pool = kv
+    ps = k_pool.shape[1]
+    lp = pos // ps
+    phys = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
+    # Unmapped lane (inactive slot / freed table row): scatter into the
+    # reserved scratch page instead of wrapping to a live page via -1.
+    phys = jnp.where(phys < 0, k_pool.shape[0] - 1, phys)
+    off = pos % ps
+
+    def upd(pool, new):
+        return pool.at[phys, off].set(new[:, 0].astype(pool.dtype))
+
+    k_pool, v_pool = upd(k_pool, k), upd(v_pool, v)
+    view_table = jnp.maximum(page_table, 0)
+
+    def view(pool):
+        g = pool[view_table]                      # (B, Lp, ps, Hkv, hd)
+        return g.reshape(g.shape[0], -1, g.shape[3], g.shape[4])
+
+    o = ll.attention_decode(q, view(k_pool), view(v_pool), pos, mode="full")
+    o = o * _head_mask(cfg)[None, None, :, None].astype(o.dtype)
+    o = o.reshape(x.shape[0], 1, -1)
+    x = x + mm(o, p, "wo")
+    return x, (k_pool, v_pool)
+
+
 def _ffn(cfg: ModelConfig, p: dict, x: jax.Array, pos_in_group: int, matmul=None):
     h = ll.apply_norm(cfg, p["ln2"], x)
     if "moe" in p:
@@ -262,6 +309,26 @@ def _attn_stack_decode(cfg: ModelConfig, params: dict, x: jax.Array, pos: jax.Ar
 
     x, new_caches = jax.lax.scan(group_body, x, (params["stack"], caches))
     return x, new_caches
+
+
+def _attn_stack_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
+                             pos: jax.Array, pools, page_table: jax.Array,
+                             matmul=None):
+    g = group_size(cfg)
+
+    def group_body(x, inp):
+        gp, gpools = inp
+        new_pools = []
+        for i in range(g):
+            p = gp[f"p{i}"]
+            x, kv = attn_block_decode_paged(cfg, p, x, pos, gpools[i],
+                                            page_table, matmul)
+            x = _ffn(cfg, p, x, i, matmul)
+            new_pools.append(kv)
+        return x, tuple(new_pools)
+
+    x, new_pools = jax.lax.scan(group_body, x, (params["stack"], pools))
+    return x, new_pools
 
 
 # ------------------------------------------------------------ ssm families --
@@ -427,3 +494,18 @@ def stack_decode(cfg: ModelConfig, params: dict, x: jax.Array, pos: jax.Array,
     if cfg.family == "hybrid":
         return _hybrid_decode(cfg, params, x, pos, caches, matmul)
     return _attn_stack_decode(cfg, params, x, pos, caches, matmul)
+
+
+def stack_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
+                       pos: jax.Array, pools, page_table: jax.Array,
+                       matmul=None):
+    """Paged-cache decode facade. Full attention only: ring caches
+    (swa/chunked) are already O(window) and recurrent state (ssm/hybrid) has
+    no sequence axis to page — those families keep dense slots (the engine's
+    capability gate, same shape as ``bucketed``)."""
+    if cfg.family in ("ssm", "hybrid") or cfg.attn_type != "full":
+        raise ValueError(
+            f"paged decode supports full-attention families only, not "
+            f"family={cfg.family!r} attn_type={cfg.attn_type!r}")
+    return _attn_stack_decode_paged(cfg, params, x, pos, pools, page_table,
+                                    matmul)

@@ -2,12 +2,24 @@
 
 A fixed pool of ``batch_slots`` decode lanes over one batched decode-state
 tree. Per tick:
-  1. admit queued requests into free slots — each prompt is prefilled
-     (batch=1) and its caches are spliced into the batched state at the slot
-     index (every state leaf has batch at axis 1, so one dynamic_update_slice
-     rule covers KV caches, SSM states and conv states uniformly);
+  1. admit queued requests into free slots — the telemetry-driven scheduler
+     (``serve/scheduler.py``) picks *which* queued requests go first, from
+     the dispatch policy's per-site telemetry (cold sites warm up on a
+     single request; skewed sites admit same-bucket cohorts); each admitted
+     prompt is prefilled (batch=1) and its caches are spliced into the
+     batched state at the slot index;
   2. one fused ``decode_step`` advances *all* active slots;
   3. finished slots (EOS / budget) emit results and free up.
+
+Paged KV cache (``paged=True``): instead of a contiguous ``max_context``
+cache per slot, full-attention KV leaves live in a shared page pool
+(``serve/page_manager.py``) and each slot holds a page *table*; slot memory
+is O(tokens generated) and decode is bitwise identical to the contiguous
+engine (tested under dyadic weights). When the pool runs dry the scheduler
+picks a victim to preempt — it re-queues with its generated prefix and
+resumes token-identically. Ring caches (swa/chunked) are already O(window)
+and recurrent state (ssm/hybrid) has no sequence axis to page, so those
+families keep dense slots — the same capability gate as ``bucketed``.
 
 SWA/chunked archs use ring caches, so slot memory is O(window), not O(ctx).
 
@@ -39,36 +51,68 @@ import numpy as np
 
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.serve.page_manager import PageManager
 from repro.serve.sampling import sample
+from repro.serve.scheduler import TelemetryScheduler
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request. ``prefix`` is engine-internal preemption
+    bookkeeping (tokens already generated before a re-queue) — leave it
+    empty on submit."""
+
     rid: int
     tokens: np.ndarray              # prompt tokens (P,)
     max_new_tokens: int = 32
     temperature: float = 0.0
+    prefix: list[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
 class Result:
+    """Finished generation: every token generated for ``rid`` (across
+    preemptions, in order) and the original prompt length."""
+
     rid: int
     tokens: list[int]
     prompt_len: int
 
 
 def bucket_len(plen: int, cap: int) -> int:
-    """Next power-of-two >= ``plen``, capped at ``cap`` (>= ``plen``)."""
+    """Next power-of-two >= ``plen``, capped at ``cap``.
+
+    Raises ValueError when ``cap < plen`` — a prompt longer than the
+    context window has no valid bucket (the engine rejects such prompts at
+    ``submit()``; regression-tested).
+    """
+    if cap < plen:
+        raise ValueError(f"prompt length {plen} exceeds bucket cap {cap}")
     b = 1
     while b < plen:
         b *= 2
-    return min(b, cap) if cap >= plen else plen
+    return min(b, cap)
 
 
 class Engine:
+    """Continuous-batching serve loop over one model (see module docstring).
+
+    ``paged=True`` enables the paged KV cache for full-attention families
+    (silently kept dense otherwise — the capability gate). ``num_pages``
+    defaults to the contiguous capacity (``batch_slots`` full lanes) so
+    admission is never pool-blocked unless the caller constrains it;
+    ``record_logits=True`` keeps a per-request trace of every sampled-from
+    logits row (parity tests / benches).
+    """
+
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
                  max_context: int = 512, eos_id: int = 2, seed: int = 0,
-                 mesh=None):
+                 mesh=None, paged: bool = False, page_size: int = 16,
+                 num_pages: int | None = None,
+                 scheduler: TelemetryScheduler | None = None,
+                 record_logits: bool = False):
+        """Allocate the decode state (dense slots or page pool) and jit the
+        prefill/decode/splice entry points."""
         assert cfg.frontend == "none", "engine serves token-in token-out archs"
         self.cfg = cfg
         self.params = params
@@ -77,12 +121,29 @@ class Engine:
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
         self.mesh = mesh
+        self.scheduler = scheduler or TelemetryScheduler()
+        self.record_logits = record_logits
+        self.logit_trace: dict[int, list[np.ndarray]] = {}
         # Right-padding is exact only for causal full attention (see module
         # docstring); other archs keep raw-length prefill.
         self.bucketed = (cfg.family not in ("ssm", "hybrid")
                          and getattr(cfg, "attn_type", "full") == "full")
+        # Paged KV shares the capability gate: ring caches are already
+        # O(window), recurrent state has no sequence axis to page.
+        self.paged = paged and self.bucketed
+        if paged and not self.paged:
+            self.scheduler.note("paged_gate_dense")
 
-        self.state = model.init_decode_state(cfg, batch_slots, max_context)
+        self.pm: PageManager | None = None
+        if self.paged:
+            if num_pages is None:
+                num_pages = batch_slots * (max_context // page_size)
+            self.pm = PageManager(num_pages=num_pages, page_size=page_size,
+                                  slots=batch_slots, max_context=max_context)
+            self.pools = model.init_paged_state(cfg, num_pages, page_size)
+            self.state = None
+        else:
+            self.state = model.init_decode_state(cfg, batch_slots, max_context)
         self.pos = np.zeros(batch_slots, np.int64)
         self.active = np.zeros(batch_slots, bool)
         self.budget = np.zeros(batch_slots, np.int64)
@@ -94,9 +155,11 @@ class Engine:
         self.decoded_tokens = 0
 
         self._decode = jax.jit(partial(model.decode_step, cfg))
+        self._decode_paged = jax.jit(partial(model.decode_step_paged, cfg))
         self._prefill = jax.jit(partial(model.prefill, cfg))
         self._prefill_padded = jax.jit(partial(model.prefill_padded, cfg))
         self._insert = jax.jit(self._insert_impl)
+        self._splice = jax.jit(self._splice_impl)
 
     def _ctx(self):
         """Mesh context for traced calls: under a mesh the sharding rules
@@ -117,37 +180,133 @@ class Engine:
 
         return jax.tree.map(put, state, new_state)
 
+    @staticmethod
+    def _splice_impl(pools, new_state, pages):
+        # Prefill caches are (n_scan, 1, bl, H, hd); pad the sequence axis
+        # to a whole number of pages, chop into page chunks and scatter them
+        # to this slot's physical pages. Junk in the pad tail is exactly the
+        # junk the contiguous engine keeps past the prompt — masked, then
+        # progressively overwritten by decode.
+        def put(pool, n):
+            ps = pool.shape[2]
+            npg = pages.shape[0]
+            pad = npg * ps - n.shape[2]
+            if pad:
+                n = jnp.pad(n, [(0, 0), (0, 0), (0, pad)]
+                            + [(0, 0)] * (n.ndim - 3))
+            chunks = n.reshape((n.shape[0], npg, ps) + n.shape[3:])
+            return pool.at[:, pages].set(chunks.astype(pool.dtype))
+
+        return jax.tree.map(put, pools, new_state)
+
     def submit(self, req: Request) -> None:
+        """Queue a request. Prompts longer than ``max_context - 1`` are
+        rejected here — there would be no cache slot left for even one
+        generated token (see ``bucket_len``)."""
+        plen = len(req.tokens)
+        if plen > self.max_context - 1:
+            raise ValueError(
+                f"request {req.rid}: prompt length {plen} exceeds "
+                f"max_context - 1 = {self.max_context - 1}; raise "
+                f"max_context or truncate the prompt")
         self.queue.append(req)
 
     # ----------------------------------------------------------------- tick
     def _admit(self) -> None:
-        for slot in range(self.B):
-            if self.active[slot] or not self.queue:
+        free = [s for s in range(self.B) if not self.active[s]]
+        if not free or not self.queue:
+            return
+        # Non-phi models have no dispatch sites of their own: pin FIFO via an
+        # empty snapshot so leftover telemetry from other models served in
+        # this process can never steer their admission order.
+        snap = (None if self.cfg.phi is not None else
+                {"sites": 0, "warm": False, "mean_usage_ratio": 1.0})
+        picks = self.scheduler.select(self.queue, len(free), self.max_context,
+                                      snapshot=snap)
+        while free and picks:
+            req = picks.pop(0)
+            prompt = np.concatenate([np.asarray(req.tokens, np.int64),
+                                     np.asarray(req.prefix, np.int64)])
+            plen = len(prompt)
+            if plen > self.max_context - 1:
+                # A re-queued prefix grew to the context edge: finish with
+                # what we have (the unpreempted run would truncate there too).
+                self.results.append(
+                    Result(req.rid, list(req.prefix), len(req.tokens)))
+                self.scheduler.note("retire_context_full")
                 continue
-            req = self.queue.pop(0)
-            prompt = np.asarray(req.tokens, np.int32)[None, :]
-            plen = prompt.shape[1]
-            with self._ctx():
-                if self.bucketed:
-                    bl = bucket_len(plen, self.max_context)
-                    padded = np.zeros((1, bl), np.int32)
-                    padded[0, :plen] = prompt[0]
-                    logits, new_state = self._prefill_padded(
-                        self.params, {"tokens": jnp.asarray(padded)},
-                        jnp.full((1,), plen - 1, jnp.int32))
-                else:
-                    logits, new_state = self._prefill(
-                        self.params, {"tokens": jnp.asarray(prompt)})
-            new_state = model.extend_caches(self.cfg, new_state, self.max_context)
+            if self.paged:
+                bl = bucket_len(plen, self.max_context)
+                if not self.pm.reserve_prefill(free[0], bl):
+                    # Pool dry: stop admitting, put the rest back in order.
+                    self.scheduler.note("admit_blocked_pool")
+                    picks.insert(0, req)
+                    break
+            self._admit_one(free.pop(0), req, prompt)
+        if picks:
+            self.queue[:0] = picks
+
+    def _admit_one(self, slot: int, req: Request, prompt: np.ndarray) -> None:
+        prompt = prompt[None, :].astype(np.int32)
+        plen = prompt.shape[1]
+        with self._ctx():
+            if self.bucketed:
+                bl = bucket_len(plen, self.max_context)
+                padded = np.zeros((1, bl), np.int32)
+                padded[0, :plen] = prompt[0]
+                logits, new_state = self._prefill_padded(
+                    self.params, {"tokens": jnp.asarray(padded)},
+                    jnp.full((1,), plen - 1, jnp.int32))
+            else:
+                logits, new_state = self._prefill(
+                    self.params, {"tokens": jnp.asarray(prompt)})
+        if self.paged:
+            n = max(1, -(-bl // self.pm.page_size))
+            pages = self.pm.tables[slot, :n].copy()
+            self.pools = self._splice(self.pools, new_state,
+                                      jnp.asarray(pages))
+        else:
+            new_state = model.extend_caches(self.cfg, new_state,
+                                            self.max_context)
             self.state = self._insert(self.state, new_state, jnp.int32(slot))
-            self.key, sk = jax.random.split(self.key)
-            first = sample(logits, sk, temperature=req.temperature)
-            self.out_tokens[slot] = [int(first[0])]
-            self.pos[slot] = prompt.shape[1]
-            self.budget[slot] = req.max_new_tokens
-            self.active[slot] = True
-            self.slot_req[slot] = req
+        self.key, sk = jax.random.split(self.key)
+        first = sample(logits, sk, temperature=req.temperature)
+        if self.record_logits:
+            self.logit_trace.setdefault(req.rid, []).append(
+                np.asarray(logits[0]))
+        self.out_tokens[slot] = [int(first[0])]
+        self.pos[slot] = plen
+        self.budget[slot] = req.max_new_tokens - len(req.prefix)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+
+    # ------------------------------------------------------------ preemption
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``: free its pages and re-queue the request at the
+        front with its generated prefix (it resumes token-identically)."""
+        req = self.slot_req[slot]
+        req.prefix = list(req.prefix) + list(self.out_tokens[slot])
+        self.queue.insert(0, req)
+        self.scheduler.note("requeue_preempted")
+        self.pm.release(slot)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.out_tokens[slot] = []
+
+    def _ensure_pages(self) -> None:
+        """Map the page each active slot's next token lands in, preempting
+        scheduler-chosen victims while the pool is dry. Terminates: every
+        preemption frees >= 1 page, and a sole survivor always fits
+        (``num_pages >= logical_pages``, checked at construction)."""
+        for slot in range(self.B):
+            if not self.active[slot]:
+                continue
+            while self.active[slot] and \
+                    not self.pm.ensure(slot, int(self.pos[slot])):
+                cands = [(s, int(self.budget[s]) - len(self.out_tokens[s]),
+                          self.slot_req[s].rid)
+                         for s in range(self.B) if self.active[s]]
+                self._preempt(self.scheduler.pick_victim(cands))
 
     def _retire(self) -> None:
         for slot in range(self.B):
@@ -157,27 +316,44 @@ class Engine:
             done = len(toks) >= self.budget[slot] or (toks and toks[-1] == self.eos_id)
             if done or self.pos[slot] >= self.max_context - 1:
                 req = self.slot_req[slot]
-                self.results.append(Result(req.rid, list(toks), len(req.tokens)))
+                self.results.append(Result(
+                    req.rid, list(req.prefix) + list(toks), len(req.tokens)))
+                if self.paged:
+                    self.pm.release(slot)
                 self.active[slot] = False
                 self.slot_req[slot] = None
 
     def tick(self) -> bool:
         """One engine iteration; returns False when fully idle."""
         self._admit()
+        if self.paged:
+            self._ensure_pages()
         if not self.active.any():
             return bool(self.queue)
         last = np.array([self.out_tokens[b][-1] if self.active[b] else 0
                          for b in range(self.B)], np.int32)
         pos = jnp.asarray(self.pos.astype(np.int32))
         with self._ctx():
-            logits, self.state = self._decode(self.params, jnp.asarray(last),
-                                              pos, self.state)
+            if self.paged:
+                logits, self.pools = self._decode_paged(
+                    self.params, jnp.asarray(last), pos, self.pools,
+                    jnp.asarray(self.pm.tables))
+            else:
+                logits, self.state = self._decode(self.params,
+                                                  jnp.asarray(last),
+                                                  pos, self.state)
         self.key, sk = jax.random.split(self.key)
         # Per-slot temperatures: a sampled request batched next to a greedy
         # one must not perturb the greedy stream.
         temps = np.array([r.temperature if r is not None else 0.0
                           for r in self.slot_req], np.float32)
         nxt = np.asarray(sample(logits, sk, temperature=temps))
+        if self.record_logits:
+            logits_np = np.asarray(logits)
+            for b in range(self.B):
+                if self.active[b]:
+                    self.logit_trace.setdefault(
+                        self.slot_req[b].rid, []).append(logits_np[b])
         for b in range(self.B):
             if self.active[b]:
                 self.out_tokens[b].append(int(nxt[b]))
@@ -188,6 +364,8 @@ class Engine:
         return True
 
     def run(self, max_ticks: int = 10_000) -> list[Result]:
+        """Tick until queue and slots drain (or ``max_ticks``); returns the
+        accumulated Results."""
         while self.tick() or self.queue or self.active.any():
             if self.ticks >= max_ticks:
                 break
@@ -198,8 +376,38 @@ class Engine:
             dispatch.get_policy().log_report(prefix="serve")
         return self.results
 
+    # ------------------------------------------------------------ reporting
     def phi_report(self) -> dict:
         """Execution-policy telemetry for the traffic served so far:
         per-site dispatch decisions + l2_nnz packer budgets."""
         from repro.kernels import dispatch
         return dispatch.get_policy().report()
+
+    def cache_report(self) -> dict:
+        """Cache-memory accounting: the contiguous allocation this
+        configuration would need, and (paged mode) the pool size and the
+        high-water mark actually touched — the bench asserts
+        ``page_hwm_bytes < contig_cache_bytes``."""
+        specs = model.decode_state_specs(self.cfg, self.B, self.max_context)
+        contig = sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                     for s in jax.tree.leaves(specs))
+        out: dict[str, Any] = {"contig_cache_bytes": int(contig)}
+        if self.paged:
+            pool_bytes = sum(v.size * v.dtype.itemsize
+                             for v in jax.tree.leaves(self.pools))
+            per_page = pool_bytes // (self.pm.num_pages + 1)
+            out.update(self.pm.report())
+            out["pool_bytes"] = int(pool_bytes)
+            out["page_bytes"] = int(per_page)
+            out["page_hwm_bytes"] = int(per_page * self.pm.hwm_pages)
+        return out
+
+    def serve_report(self) -> dict:
+        """Scheduler decision counts + cache accounting + run counters."""
+        return {
+            "scheduler_decisions": self.scheduler.report(),
+            "cache": self.cache_report(),
+            "ticks": self.ticks,
+            "decoded_tokens": self.decoded_tokens,
+            "paged": self.paged,
+        }
