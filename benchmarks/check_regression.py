@@ -1,4 +1,4 @@
-"""CI bench-regression gate over BENCH_kernels/BENCH_sim/BENCH_serve.json.
+"""CI bench gate over BENCH_kernels/BENCH_sim/BENCH_serve/BENCH_obs.json.
 
 Compares a freshly generated bench file against its committed baseline
 (``benchmarks/baseline/BENCH_*.json``) on the *deterministic* columns
@@ -26,7 +26,13 @@ only — the ones that are pure functions of the code, not of runner load:
     match **exactly** in both directions — a silently flipped scheduling
     decision is the same regression class as a flipped dispatch decision.
     Wall-clock latency columns (``p50_ms``/``p99_ms``/``requests_per_s``)
-    match no gated class and are ignored.
+    match no gated class and are ignored;
+  * ``obs`` + ``obs_counts`` (observability) — the obs layer's bench
+    (``benchmarks/obs_bench.py``): trace/metric artifact byte counts and
+    overhead fractions may not grow (serve column classes), and the span/
+    metric counts in ``obs_counts`` must match **exactly** in both
+    directions — a span kind that disappears (or doubles) is an
+    observability regression even when its values look plausible.
 
 Wall-time columns (``us_per_call``/``per_impl_us``) are deliberately
 ignored — they are noise on shared CI runners; the HBM model and the
@@ -138,6 +144,22 @@ def _compare_sections(base: dict, cur: dict, label: str, classify,
                     f"baseline to cover it")
 
 
+def _compare_exact_counts(base: dict, cur: dict, label: str, noun: str,
+                          errs: list[str]) -> None:
+    """Gate a flat name->count dict exactly in BOTH directions (shared by
+    the scheduler-decision and obs span/metric count gates)."""
+    for name, n in sorted(base.items()):
+        got = cur.get(name)
+        if got is None:
+            errs.append(f"{label}[{name}]: {noun} disappeared "
+                        f"(baseline counted {n})")
+        elif got != n:
+            errs.append(f"{label}[{name}]: {noun} changed {n} -> {got}")
+    for name in sorted(set(cur) - set(base)):
+        errs.append(f"{label}[{name}]: new {noun} (counted {cur[name]}) — "
+                    f"regenerate the baseline to cover it")
+
+
 def compare(baseline: dict, current: dict, rtol: float) -> list[str]:
     """Returns a list of human-readable regression descriptions (empty =
     pass)."""
@@ -152,21 +174,16 @@ def compare(baseline: dict, current: dict, rtol: float) -> list[str]:
                       "sim", _sim_class, rtol, errs)
     _compare_sections(baseline.get("serve", {}), current.get("serve", {}),
                       "serve", _serve_class, rtol, errs)
+    # Obs sections reuse the serve classes: artifact bytes/fracs no-grow.
+    _compare_sections(baseline.get("obs", {}), current.get("obs", {}),
+                      "obs", _serve_class, rtol, errs)
 
-    base_sched = baseline.get("scheduler_decisions", {})
-    cur_sched = current.get("scheduler_decisions", {})
-    for kind, n in sorted(base_sched.items()):
-        got = cur_sched.get(kind)
-        if got is None:
-            errs.append(f"scheduler[{kind}]: decision kind disappeared "
-                        f"(baseline counted {n})")
-        elif got != n:
-            errs.append(f"scheduler[{kind}]: decision count changed "
-                        f"{n} -> {got}")
-    for kind in sorted(set(cur_sched) - set(base_sched)):
-        errs.append(f"scheduler[{kind}]: new decision kind (counted "
-                    f"{cur_sched[kind]}) — regenerate the baseline to "
-                    f"cover it")
+    _compare_exact_counts(baseline.get("scheduler_decisions", {}),
+                          current.get("scheduler_decisions", {}),
+                          "scheduler", "decision kind", errs)
+    _compare_exact_counts(baseline.get("obs_counts", {}),
+                          current.get("obs_counts", {}),
+                          "obs_counts", "span/metric count", errs)
 
     base_hbm = baseline.get("hbm_model_bytes", {})
     cur_hbm = current.get("hbm_model_bytes", {})
@@ -252,11 +269,16 @@ def main(argv: list[str] | None = None) -> int:
     n_serve = sum(sum(1 for c in v if _serve_class(c) is not None
                       and isinstance(v[c], (int, float)))
                   for v in baseline.get("serve", {}).values())
+    n_obs = sum(sum(1 for c in v if _serve_class(c) is not None
+                    and isinstance(v[c], (int, float)))
+                for v in baseline.get("obs", {}).values())
     print(f"bench regression gate: OK ({n_cols} modelled-byte columns, "
           f"{n_sim} sim columns, {n_serve} serve columns, "
+          f"{n_obs} obs columns, "
           f"{len(_decisions(baseline))} dispatch sites, "
           f"{len(baseline.get('scheduler_decisions', {}))} scheduler "
-          f"decision kinds)")
+          f"decision kinds, "
+          f"{len(baseline.get('obs_counts', {}))} exact obs counts)")
     return 0
 
 

@@ -1,0 +1,245 @@
+"""Observability benchmark: exactness, determinism, drift, overhead.
+
+Four sections over ``repro.obs`` (run standalone with ``PYTHONPATH=src``),
+all deterministic and CI-gated via ``check_regression.py`` against
+``benchmarks/baseline/BENCH_obs.json``:
+
+  * ``exact``   — the obs layer's core contract: the phi-dyadic serve
+    workload (the ``serve_bench`` recipe) run twice, uninstrumented and
+    fully instrumented (tracer + engine metrics + wall-time OFF). Token
+    streams AND per-request logit traces must be **bitwise** identical —
+    observability is host-side only and may never perturb the computation.
+  * ``determinism`` — the instrumented run repeated with the same seed
+    must reproduce the trace JSONL **byte-for-byte** and the metric
+    snapshots exactly (monotonic seq/tick counters, sorted-key JSONL,
+    fixed histogram edges — no wall-clock anywhere in the gated path).
+  * ``drift``   — the PSI monitor (``repro.obs.drift``) over two injected
+    suites: a Zipf-shifted runtime histogram (pattern popularity ranks
+    rotated against calibration) that MUST alert, and a scaled stationary
+    histogram that must NOT (same seed, pure numpy — deterministic).
+  * ``overhead`` — ``perfmodel.obs_overhead_report`` on the measured trace
+    and metric artifact bytes: ``*_bytes``/``*_frac`` columns are no-grow
+    gated, so the obs layer cannot silently bloat per-request output.
+
+The ``obs_counts`` dict (span kind -> count, plus key metric totals) is
+gated **exactly** in both directions, like scheduler decisions: a span that
+disappears (or doubles) is an observability regression even when the
+numbers it carries look plausible.
+
+``--json PATH`` writes ``BENCH_obs.json``; ``--trace-out PATH`` keeps the
+instrumented run's trace for artifact upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import serve_bench  # noqa: E402
+
+from repro.core import perfmodel  # noqa: E402
+from repro.kernels import dispatch  # noqa: E402
+from repro.obs import (DriftMonitor, JsonlSink, ListSink,  # noqa: E402
+                       Tracer, set_tracer, site_drift)
+from repro.serve.engine import Engine  # noqa: E402
+
+SCHEMA = 1
+
+
+def _fresh_policy(cfg) -> None:
+    """Reset the process policy's run telemetry (keep calibration usage) so
+    every engine run in this bench starts from the same policy state."""
+    dispatch.get_policy().reset(keep_usage=True)
+    del cfg
+
+
+def _run(cfg, params, *, tracer=None) -> Engine:
+    """One phi-dyadic serve run (the serve_bench parity workload)."""
+    eng = Engine(cfg, params, batch_slots=2, max_context=64,
+                 paged=True, page_size=8, record_logits=True, tracer=tracer)
+    for r in serve_bench._requests(np.random.default_rng(7), cfg,
+                                   n=4, lo=5, hi=14, max_new=4):
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+def _trace_run(cfg, params, jsonl_path: str | None):
+    """Instrumented run: lifecycle + dispatch spans into a ListSink (and
+    optionally a JSONL file), returning (engine, records, jsonl_bytes)."""
+    mem = ListSink()
+
+    class Tee:
+        """Fan one record stream out to the in-memory + JSONL sinks."""
+
+        def __init__(self, sinks):
+            self.sinks = sinks
+
+        def write(self, record):
+            for s in self.sinks:
+                s.write(record)
+
+        def close(self):
+            for s in self.sinks:
+                s.close()
+
+    sinks = [mem]
+    if jsonl_path:
+        sinks.append(JsonlSink(jsonl_path))
+    tracer = Tracer(Tee(sinks))
+    prev = set_tracer(tracer)
+    try:
+        _fresh_policy(cfg)
+        eng = _run(cfg, params, tracer=tracer)
+    finally:
+        set_tracer(prev)
+        tracer.close()
+    raw = "".join(json.dumps(r, sort_keys=True, separators=(",", ":")) + "\n"
+                  for r in mem.records)
+    return eng, tracer, mem.records, raw
+
+
+def _zipf_hist(t: int, q: int, total: int, shift: int,
+               a: float = 1.5) -> np.ndarray:
+    """(T, q+1) histogram with Zipf(a) pattern popularity, ranks rotated by
+    ``shift`` — shift=0 is the calibration distribution itself."""
+    ranks = (np.arange(q) + 1).astype(np.float64)
+    p = 1.0 / ranks ** a
+    p = np.roll(p / p.sum(), shift)
+    hist = np.zeros((t, q + 1), np.int64)
+    hist[:, :q] = np.round(p * total).astype(np.int64)
+    hist[:, q] = max(1, total // 20)          # a thin unmatched tail
+    return hist
+
+
+def main(json_path: str | None = None,
+         trace_path: str | None = None) -> list[str]:
+    rows = ["obs,section,metric,value"]
+    sections: dict[str, dict] = {}
+    counts: dict[str, int] = {}
+
+    def emit(section: str, cols: dict) -> None:
+        sections[section] = cols
+        for metric, v in cols.items():
+            rows.append(f"obs,{section},{metric},{v}")
+
+    cfg, params = serve_bench._phi_dyadic_setup()
+
+    # ---- exact: instrumented vs uninstrumented, bitwise ------------------
+    _fresh_policy(cfg)
+    plain = _run(cfg, params)
+    plain_tokens = {r.rid: r.tokens for r in plain.results}
+
+    inst, tracer, records, raw1 = _trace_run(cfg, params, trace_path)
+    inst_tokens = {r.rid: r.tokens for r in inst.results}
+
+    assert plain_tokens == inst_tokens, \
+        f"instrumentation changed tokens: {plain_tokens} vs {inst_tokens}"
+    for rid, trace in plain.logit_trace.items():
+        assert len(trace) == len(inst.logit_trace[rid])
+        for i, (a, b) in enumerate(zip(trace, inst.logit_trace[rid])):
+            assert np.array_equal(a, b), \
+                f"instrumentation perturbed logits at rid={rid} step={i}"
+    emit("exact", {
+        "requests": len(inst_tokens),
+        "decoded_tokens": inst.decoded_tokens,
+        "spans_total": sum(tracer.kind_counts.values()),
+        "bitwise_ok": 1,
+    })
+
+    # ---- determinism: same seed -> byte-identical trace + metrics -------
+    inst2, tracer2, _, raw2 = _trace_run(cfg, params, None)
+    assert raw1 == raw2, "trace JSONL not byte-identical across two " \
+        "same-seed instrumented runs"
+    snap1 = inst.metrics.snapshot()
+    snap2 = inst2.metrics.snapshot()
+    assert snap1 == snap2, "engine metric snapshots diverge across " \
+        "two same-seed runs"
+    psnap = dispatch.get_policy().metrics_snapshot()
+    emit("determinism", {
+        "trace_bytes_run1": len(raw1.encode()),
+        "trace_bytes_run2": len(raw2.encode()),
+        "identical": 1,
+    })
+
+    # ---- drift: injected Zipf shift must alert, stationary must not ------
+    t_dim, q_dim = 2, 16
+    calib = _zipf_hist(t_dim, q_dim, total=4000, shift=0)
+    shifted = _zipf_hist(t_dim, q_dim, total=4000, shift=q_dim // 2)
+    stationary = calib * 7                      # same shape, more traffic
+    score_shift = site_drift(calib, shifted)
+    score_stat = site_drift(calib, stationary)
+    pol = dispatch.PhiExecutionPolicy()
+    pol.register_usage("bench.shifted", calib)
+    pol.register_usage("bench.stationary", calib)
+    with pol._lock:
+        pol._sites["bench.shifted"] = {"executions": 1,
+                                       "usage_runtime": shifted}
+        pol._sites["bench.stationary"] = {"executions": 1,
+                                          "usage_runtime": stationary}
+    verdict = DriftMonitor(pol, prefix="bench.").check()
+    assert verdict["alerts"] == ["bench.shifted"], verdict
+    emit("drift", {
+        "shifted_psi": round(float(score_shift), 6),
+        "stationary_psi": round(float(score_stat), 6),
+        "alerts": len(verdict["alerts"]),
+        "alert_correct": 1,
+    })
+
+    # ---- overhead: artifact bytes vs the served payload ------------------
+    metrics_doc = json.dumps({"engine": snap1, "policy": psnap},
+                             sort_keys=True)
+    emit("overhead", perfmodel.obs_overhead_report(
+        trace_bytes=len(raw1.encode()),
+        metrics_bytes=len(metrics_doc.encode()),
+        decoded_tokens=inst.decoded_tokens,
+        payload_bytes=inst.cache_report()["contig_cache_bytes"]))
+
+    # ---- obs_counts: exact both-direction gate ---------------------------
+    for kind, n in sorted(tracer.kind_counts.items()):
+        counts[f"span_{kind}"] = int(n)
+    counts["metric_decoded_tokens"] = inst.decoded_tokens
+    counts["metric_ticks"] = inst.ticks
+    counts["metric_requests_retired"] = int(
+        inst.metrics.get("requests_retired").total())
+    counts["metric_latency_observations"] = int(
+        inst.metrics.get("request_latency_ticks").count())
+    counts["metric_scheduler_decisions"] = sum(
+        inst.scheduler.report().values())
+    counts["metric_dispatch_decisions"] = sum(
+        dispatch.get_policy().decisions().values())
+    counts["metric_drift_alerts"] = int(
+        pol.metrics.counter("drift_alert", labelnames=("site",)).total())
+    for metric, v in sorted(counts.items()):
+        rows.append(f"obs,counts,{metric},{v}")
+
+    if json_path:
+        payload = {
+            "schema": SCHEMA,
+            "kind": "obs",
+            "obs": sections,
+            "obs_counts": dict(sorted(counts.items())),
+            "config": {"slots": 2, "max_context": 64, "page_size": 8,
+                       "drift_t": t_dim, "drift_q": q_dim},
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", nargs="?", const="BENCH_obs.json",
+                    default=None, metavar="PATH",
+                    help="write structured results (default path "
+                         "BENCH_obs.json when the flag is given bare)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="keep the instrumented run's span trace as JSONL "
+                         "(CI uploads it as an artifact)")
+    args = ap.parse_args()
+    print("\n".join(main(json_path=args.json, trace_path=args.trace_out)))

@@ -21,10 +21,13 @@ Three sections over ``repro.serve.engine`` (run standalone with
     silently flipped scheduling decision is the same regression class as
     a flipped dispatch decision.
   * ``latency`` — per-token decode latency percentiles and request
-    throughput from the parity workload's paged run. Deliberately NOT
-    gated (``p50_ms`` / ``p99_ms`` / ``requests_per_s`` match no gated
-    column class): wall time is runner noise; the gated story is bytes,
-    ratios and decisions.
+    throughput from the parity workload's paged run, read from the
+    engine's ``serve_token_latency_ms`` histogram (``repro.obs.metrics``,
+    ``wall_time=True``) — the same registration and percentile code path
+    the production launcher reports from, so bench and production can
+    never drift apart. Deliberately NOT gated (``p50_ms`` / ``p99_ms`` /
+    ``requests_per_s`` match no gated column class): wall time is runner
+    noise; the gated story is bytes, ratios and decisions.
 
 ``--json PATH`` writes ``BENCH_serve.json`` (schema-versioned); CI
 compares it against ``benchmarks/baseline/BENCH_serve.json``.
@@ -34,7 +37,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -78,22 +80,6 @@ def _requests(rng: np.random.Generator, cfg, n: int, lo: int, hi: int,
             for i in range(n)]
 
 
-def _timed_run(eng: Engine) -> tuple[list, list[float]]:
-    """eng.run() with a per-decode-token wall-clock sample per tick."""
-    per_token_s: list[float] = []
-    while True:
-        n_before = eng.decoded_tokens
-        t0 = time.perf_counter()
-        alive = eng.tick()
-        dt = time.perf_counter() - t0
-        n = eng.decoded_tokens - n_before
-        if n:
-            per_token_s.append(dt / n)
-        if not alive and not eng.queue and not eng.active.any():
-            break
-    return eng.results, per_token_s
-
-
 def _leaf_geometry(cfg, slots: int, context: int) -> dict:
     """(n_scan, kv_heads, head_dim) of the decode cache leaves, for the
     perfmodel cross-check."""
@@ -130,11 +116,11 @@ def main(json_path: str | None = None) -> list[str]:
     absorb(dense)
 
     paged = Engine(cfg, params, batch_slots=slots, max_context=ctx,
-                   paged=True, page_size=page, record_logits=True)
+                   paged=True, page_size=page, record_logits=True,
+                   wall_time=True)
     for r in make():
         paged.submit(r)
-    paged_out, per_token_s = _timed_run(paged)
-    paged_res = {r.rid: r.tokens for r in paged_out}
+    paged_res = {r.rid: r.tokens for r in paged.run()}
     absorb(paged)
 
     assert dense_res == paged_res, \
@@ -163,12 +149,14 @@ def main(json_path: str | None = None) -> list[str]:
         "requests": len(paged_res),
     })
 
-    # ---- latency: wall-clock from the paged parity run (NOT gated) ------
-    lat = np.array(per_token_s) * 1e3
-    total_s = float(np.sum(per_token_s)) or 1e-9
+    # ---- latency: wall-clock from the paged parity run (NOT gated), read
+    # from the engine's own metrics histogram — one code path with the
+    # production report in launch/serve.py --obs ------------------------
+    hist = paged.metrics.get("token_latency_ms")
+    total_s = max(hist.sum() / 1e3, 1e-9)
     emit("latency", {
-        "p50_ms": _round(float(np.percentile(lat, 50)), 3),
-        "p99_ms": _round(float(np.percentile(lat, 99)), 3),
+        "p50_ms": _round(hist.percentile(50), 3),
+        "p99_ms": _round(hist.percentile(99), 3),
         "requests_per_s": _round(len(paged_res) / total_s, 3),
     })
 

@@ -530,3 +530,33 @@ def paged_pool_bytes(*, n_scan: int, num_pages: int, page_size: int,
     """Bytes of a paged decode KV pool (includes the +1 scratch page)."""
     per_leaf = (num_pages + 1) * page_size * kv_heads * head_dim * dtype_bytes
     return 2 * n_scan * per_leaf
+
+
+# --------------------------------------------------------------------------
+# Observability byte-overhead model.
+#
+# The obs layer (repro.obs) is host-side only — it never adds device
+# traffic — but its artifacts (trace JSONL, metric snapshots) are bytes a
+# production deployment ships per request. This closed form turns the
+# measured artifact sizes into the two numbers the CI gate pins
+# (benchmarks/obs_bench.py -> BENCH_obs.json): bytes of observability
+# output per decoded token, and the overhead fraction against the payload
+# the run actually served (the KV-cache bytes it touched).
+
+def obs_overhead_report(*, trace_bytes: int, metrics_bytes: int,
+                        decoded_tokens: int, payload_bytes: int) -> dict:
+    """Observability overhead accounting for one serve run.
+
+    ``trace_bytes``/``metrics_bytes`` are the serialized artifact sizes,
+    ``decoded_tokens`` the run's decoded-token count, ``payload_bytes`` the
+    reference payload (typically the engine's ``contig_cache_bytes``).
+    Returns gate-named columns: ``*_bytes`` and ``*_frac`` are no-grow
+    columns under ``check_regression.py``'s serve classifier.
+    """
+    total = int(trace_bytes) + int(metrics_bytes)
+    return {
+        "obs_trace_bytes": int(trace_bytes),
+        "obs_metrics_bytes": int(metrics_bytes),
+        "obs_bytes_per_token": round(total / max(1, int(decoded_tokens)), 4),
+        "obs_overhead_frac": round(total / max(1, int(payload_bytes)), 6),
+    }

@@ -79,6 +79,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.utils import log
 
 IMPLS = ("fused", "fused_stream", "fused_prefetch", "pallas", "coo", "ref")
@@ -253,9 +254,15 @@ class PhiExecutionPolicy:
         self.override = override
         self.telemetry = telemetry and os.environ.get("PHI_TELEMETRY") != "0"
         self._lock = threading.Lock()
-        # (site, impl, reason) -> trace count. Decisions happen at trace
-        # time, so under jit caching the counts reflect traces, not steps.
-        self._decisions: dict[tuple[str, str, str], int] = {}
+        # Typed metric mirror of the telemetry below (obs/metrics.py): the
+        # decision counts live in a labelled counter — decisions() / report()
+        # stay as thin views over it. Decisions happen at trace time, so
+        # under jit caching the counts reflect traces, not steps.
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics = MetricsRegistry(namespace="phi")
+        self._dec = self.metrics.counter(
+            "dispatch_decisions", "trace-time dispatch resolutions",
+            labelnames=("site", "impl", "reason"))
         # site -> most recent full Decision (incl. local shape + shards).
         self._last: dict[str, Decision] = {}
         # site -> runtime counters fed by the fused kernel's l2_nnz output.
@@ -317,17 +324,27 @@ class PhiExecutionPolicy:
         * ``warm`` / ``executions`` — whether the site has executed (a cold
           site's first trace pays the pre-pass; later traces reuse its
           runtime sets), and how often;
-        * ``impl`` / ``reason`` — the most recent resolved Decision, if any.
+        * ``impl`` / ``reason`` — the most recent resolved Decision, if any;
+        * ``drift_score`` — PSI between the site's calibration histogram and
+          its aggregated runtime match histogram (``repro.obs.drift``), None
+          until both exist — the bank-swap trigger signal;
+        * ``shards`` — mesh extent of the runtime counters (1 off-mesh).
 
-        Sites come from both the calibration registry (:meth:`register_usage`)
-        and the runtime counters (:meth:`_record_nnz`), so the view covers
-        calibrated-but-never-run sites too.
+        Sites come from the calibration registry (:meth:`register_usage`),
+        the runtime counters (:meth:`_record_nnz`) *and* the decision log,
+        so the view covers calibrated-but-never-run sites and sites that
+        resolved decisions without runtime counters.
         """
         jax.effects_barrier()   # flush in-flight telemetry callbacks
         from repro.core.patterns import active_pattern_sets
+        from repro.obs.drift import site_drift
         rows: list[dict] = []
         with self._lock:
-            names = sorted(set(self._usage) | set(self._sites))
+            # _last too: a site can have resolved decisions without ever
+            # executing (telemetry off, or the call never ran) — the view
+            # must still cover it (regression-tested edge case).
+            names = sorted(set(self._usage) | set(self._sites)
+                           | set(self._last))
             for site in names:
                 if prefix and not site.startswith(prefix):
                     continue
@@ -337,6 +354,11 @@ class PhiExecutionPolicy:
                 counters = self._sites.get(site)
                 execs = 0 if counters is None else int(
                     counters.get("executions", 0))
+                hist = None if counters is None else \
+                    counters.get("usage_runtime")
+                drift = None
+                if usage is not None and hist is not None and hist.sum() > 0:
+                    drift = float(site_drift(usage, hist))
                 last = self._last.get(site)
                 rows.append({
                     "site": site,
@@ -345,6 +367,9 @@ class PhiExecutionPolicy:
                     "skewed": sets is not None,
                     "warm": execs > 0,
                     "executions": execs,
+                    "shards": 1 if counters is None else int(
+                        counters.get("shards", 1)),
+                    "drift_score": drift,
                     "impl": None if last is None else last.impl,
                     "reason": None if last is None else last.reason,
                 })
@@ -670,11 +695,19 @@ class PhiExecutionPolicy:
             block_q=bq, block_kv=bkv, impl=mode)
 
     def _record_decision(self, d: Decision) -> None:
-        key = (d.site, d.impl, d.reason)
+        first = self._dec.get(site=d.site, impl=d.impl, reason=d.reason) == 0
+        self._dec.inc(site=d.site, impl=d.impl, reason=d.reason)
         with self._lock:
-            first = key not in self._decisions
-            self._decisions[key] = self._decisions.get(key, 0) + 1
             self._last[d.site] = d
+        tracer = obs_trace.get_tracer()
+        if tracer is not None:
+            # Host-side and trace-time only: the span cannot perturb the
+            # traced computation (the obs_bench exactness contract).
+            tracer.emit("dispatch", site=d.site, impl=d.impl, reason=d.reason,
+                        shape=[int(x) for x in d.shape],
+                        blocks=(None if d.blocks is None
+                                else [int(b) for b in d.blocks]),
+                        shards=d.shards)
         if first:
             log.info("phi dispatch: %s -> %s (%s, M=%d K=%d N=%d)",
                      d.site, d.impl, d.reason, *d.shape[:3])
@@ -804,13 +837,26 @@ class PhiExecutionPolicy:
                 if prev is not None and prev.shape == h.shape:
                     h = prev + h
                 c["usage_runtime"] = h
+            max_block = c["l2_nnz_max_block"]
+        # Metric mirror (sums/counts are order-independent, so these stay
+        # deterministic under the unordered callbacks; readers flush with
+        # jax.effects_barrier() first — report() does).
+        self.metrics.counter("site_executions", "fused-kernel callbacks",
+                             labelnames=("site",)).inc(site=site)
+        self.metrics.counter("site_rows", "activation rows processed",
+                             labelnames=("site",)).inc(rows, site=site)
+        self.metrics.counter("site_l2_nnz", "streamed L2 nonzeros",
+                             labelnames=("site",)).inc(int(nnz.sum()),
+                                                       site=site)
+        self.metrics.gauge("site_l2_nnz_max_block", "peak per-block L2 nnz",
+                           labelnames=("site",)).set(max_block, site=site)
 
     # ----------------------------------------------------------- reporting --
     def decisions(self) -> dict[tuple[str, str, str], int]:
         """Trace counts keyed by (site, impl, reason) — decisions happen at
-        trace time, so under jit caching these count traces, not steps."""
-        with self._lock:
-            return dict(self._decisions)
+        trace time, so under jit caching these count traces, not steps.
+        (A thin view over the ``phi_dispatch_decisions`` counter.)"""
+        return {key: int(v) for key, v in self._dec.items()}
 
     def last_decision(self, site: str) -> Decision | None:
         """The most recent Decision resolved for ``site`` — carries the
@@ -826,11 +872,17 @@ class PhiExecutionPolicy:
         # them or a report taken right after a step under-counts (the PR-1
         # calibration race, caught by PHI-LINT-BARRIER).
         jax.effects_barrier()
+        decisions = self.decisions()
         with self._lock:
-            decisions = dict(self._decisions)
             sites = {k: dict(v) for k, v in self._sites.items()}
         return {"decisions": decisions,
                 "packer_budgets": packer_budget_report(sites)}
+
+    def metrics_snapshot(self) -> dict:
+        """Deterministic JSON view of the policy's metric registry, flushed
+        past any in-flight telemetry callbacks first."""
+        jax.effects_barrier()
+        return self.metrics.snapshot()
 
     def log_report(self, prefix: str = "phi") -> None:
         """Log :meth:`report` (dispatch counts + packer budgets) at INFO."""
@@ -845,13 +897,21 @@ class PhiExecutionPolicy:
                      b.l2_nnz_total, b.peak_block_density, b.cap_required,
                      b.nnz_budget_required)
 
-    def reset(self) -> None:
-        """Clear all telemetry: decisions, runtime counters, usage registry."""
+    def reset(self, keep_usage: bool = False) -> None:
+        """Clear telemetry: decisions, runtime counters and metrics — plus
+        the calibration usage registry unless ``keep_usage`` is set.
+
+        ``keep_usage=True`` is the between-runs reset (``Engine.
+        reset_telemetry``): run counters must zero so back-to-back runs
+        report identically, but the calibration histograms describe the
+        *model*, not the run, and wiping them would silently disable the
+        prefetch usage gate for every later trace."""
         with self._lock:
-            self._decisions.clear()
             self._last.clear()
             self._sites.clear()
-            self._usage.clear()
+            if not keep_usage:
+                self._usage.clear()
+        self.metrics.reset()
 
 
 # ------------------------------------------------------ per-shard usage ------

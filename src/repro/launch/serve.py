@@ -4,7 +4,14 @@ stream, reporting throughput/latency/slot-utilisation.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1p5_4b --smoke \
         --requests 16 --slots 4 [--phi] [--ckpt-dir DIR] \
-        [--host-devices 8 --mesh-model 4]
+        [--host-devices 8 --mesh-model 4] \
+        [--trace-out trace.jsonl --metrics-out metrics.prom --obs]
+
+Observability (docs/observability.md): ``--trace-out`` streams the request
+lifecycle + dispatch spans as deterministic JSONL, ``--metrics-out`` writes
+the merged metric registries (Prometheus text for ``.prom``/``.txt``, JSON
+otherwise), ``--obs`` adds wall-time sampling (per-token latency histogram,
+span durations) on top.
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ from repro.distributed.sharding import init_params  # noqa: E402
 from repro.kernels import dispatch  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import model  # noqa: E402
+from repro import obs  # noqa: E402
 from repro.serve.engine import Engine, Request  # noqa: E402
 from repro.utils import log  # noqa: E402
 
@@ -68,6 +76,18 @@ def main() -> None:
                     help="physical page-pool size; undersizing it forces "
                          "scheduler preemption (default: worst case, "
                          "slots * max_context / page_size)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request/dispatch span trace as JSONL "
+                         "(deterministic: monotonic seq/tick counters, no "
+                         "wall-clock unless --obs)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the merged metric registries at exit — "
+                         "Prometheus text exposition for .prom/.txt paths, "
+                         "JSON snapshot otherwise")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable wall-time observation: per-token latency "
+                         "histogram (p50/p99 logged from the same code path "
+                         "the bench gates) and wall_ms fields on trace spans")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N virtual CPU devices for off-TPU mesh "
@@ -118,10 +138,17 @@ def main() -> None:
         mesh = make_mesh((nd // args.mesh_model, args.mesh_model),
                          ("data", "model"))
         log.info("serving on %s", dict(mesh.shape))
+    tracer = None
+    if args.trace_out:
+        # Installed process-wide so the dispatch policy's per-call spans
+        # interleave with the engine's lifecycle spans in one stream.
+        tracer = obs.Tracer(obs.JsonlSink(args.trace_out),
+                            wall_time=args.obs)
+        obs.set_tracer(tracer)
     eng = Engine(cfg, params, batch_slots=args.slots,
                  max_context=args.max_context, mesh=mesh,
                  paged=args.paged, page_size=args.page_size,
-                 num_pages=args.pages)
+                 num_pages=args.pages, tracer=tracer, wall_time=args.obs)
     rng = np.random.default_rng(0)
     t_sub = time.time()
     for rid in range(args.requests):
@@ -145,6 +172,31 @@ def main() -> None:
                  cache["num_pages"], cache["page_size"],
                  cache["hwm_pages"], cache["page_hwm_bytes"],
                  cache["contig_cache_bytes"])
+    if args.obs:
+        # Same histogram + percentile code path the serve bench reports
+        # from (obs.metrics.Histogram.percentile) — one latency story.
+        hist = eng.metrics.get("token_latency_ms")
+        log.info("token latency p50 %.3fms p99 %.3fms (%d tokens)",
+                 hist.percentile(50), hist.percentile(99), hist.count())
+    registries = [eng.metrics]
+    if args.phi:
+        registries.append(dispatch.get_policy().metrics)
+        jax.effects_barrier()   # flush callback-fed counters before export
+    if args.metrics_out:
+        if args.metrics_out.endswith((".prom", ".txt")):
+            body = obs.prometheus_many(registries)
+        else:
+            import json
+            body = json.dumps(obs.snapshot_many(registries),
+                              sort_keys=True, indent=2)
+        with open(args.metrics_out, "w") as f:
+            f.write(body)
+        log.info("metrics written to %s", args.metrics_out)
+    if tracer is not None:
+        obs.set_tracer(None)
+        tracer.close()
+        log.info("trace written to %s (%d spans)", args.trace_out,
+                 sum(tracer.kind_counts.values()))
 
 
 if __name__ == "__main__":

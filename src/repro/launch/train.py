@@ -22,6 +22,7 @@ from repro.data.pipeline import DataConfig, LoaderState, Prefetcher, ShardedLoad
 from repro.distributed import sharding as shd
 from repro.distributed.watchdog import StepWatchdog
 from repro.kernels import dispatch
+from repro import obs
 from repro.models import model
 from repro.train import optimizer as opt
 from repro.train import step as step_lib
@@ -30,8 +31,16 @@ from repro.utils import StepTimer, log
 
 def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
                ckpt_dir: str | None = None, ckpt_every: int = 50,
-               mesh=None, seed: int = 0, log_every: int = 10):
+               mesh=None, seed: int = 0, log_every: int = 10,
+               metrics: obs.MetricsRegistry | None = None):
     rules = shd.TRAIN_RULES
+    # Observability (repro.obs): step counters/histograms land in the
+    # caller's registry; the process tracer (if installed via --trace-out)
+    # gets one "train_step" span per step with the monotonic step counter.
+    metrics = metrics if metrics is not None else obs.MetricsRegistry("train")
+    m_steps = metrics.counter("steps", "optimizer steps completed")
+    m_loss = metrics.gauge("last_loss", "most recent training loss")
+    m_step_ms = metrics.histogram("step_ms", "wall time per training step")
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=global_batch, seed=seed)
     loader = ShardedLoader(dcfg)
     mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
@@ -96,7 +105,14 @@ def train_loop(cfg, ocfg, *, steps: int, global_batch: int, seq: int,
                 {k: jnp.asarray(v) for k, v in batch.items()})
             loss = float(loss)
         losses.append(loss)
-        verdict = watchdog.record(t.history[-1] if t.history else 0.0)
+        m_steps.inc()
+        m_loss.set(loss)
+        step_s = t.history[-1] if t.history else 0.0
+        m_step_ms.observe(step_s * 1e3)
+        tracer = obs.get_tracer()
+        if tracer is not None:
+            tracer.emit("train_step", step=step + 1, loss=loss)
+        verdict = watchdog.record(step_s)
         # NB: save the CONSUMED cursor (step+1), not loader.state — the
         # prefetcher runs ahead of consumption (caught by
         # tests/test_fault_tolerance.py).
@@ -132,6 +148,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write train_step + dispatch spans as JSONL")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the step metrics at exit (Prometheus text "
+                         "for .prom/.txt paths, JSON otherwise)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -142,12 +163,34 @@ def main() -> None:
             cfg = cfg.with_(phi=dataclasses.replace(cfg.phi, impl=args.phi_impl))
     ocfg = opt.OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                          decay_steps=args.steps)
+    tracer = None
+    if args.trace_out:
+        tracer = obs.Tracer(obs.JsonlSink(args.trace_out))
+        obs.set_tracer(tracer)
+    metrics = obs.MetricsRegistry("train")
     t0 = time.time()
     _, losses = train_loop(cfg, ocfg, steps=args.steps, global_batch=args.batch,
                            seq=args.seq, ckpt_dir=args.ckpt_dir,
-                           ckpt_every=args.ckpt_every)
+                           ckpt_every=args.ckpt_every, metrics=metrics)
     log.info("done: loss %.4f -> %.4f in %.1fs",
              losses[0], float(np.mean(losses[-10:])), time.time() - t0)
+    if args.metrics_out:
+        registries = [metrics]
+        if args.phi:
+            jax.effects_barrier()   # flush callback-fed dispatch counters
+            registries.append(dispatch.get_policy().metrics)
+        if args.metrics_out.endswith((".prom", ".txt")):
+            body = obs.prometheus_many(registries)
+        else:
+            import json
+            body = json.dumps(obs.snapshot_many(registries),
+                              sort_keys=True, indent=2)
+        with open(args.metrics_out, "w") as f:
+            f.write(body)
+        log.info("metrics written to %s", args.metrics_out)
+    if tracer is not None:
+        obs.set_tracer(None)
+        tracer.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Unified observability layer: tracing, metrics, drift monitoring.
+
+Three pillars, one package (see docs/observability.md):
+
+* :mod:`repro.obs.trace` — span tracer for the request lifecycle and
+  dispatch decisions, deterministic JSONL via pluggable sinks;
+* :mod:`repro.obs.metrics` — typed counter/gauge/histogram registry with
+  Prometheus-text and JSON snapshot writers, engine-scoped namespaces and
+  reset plumbing;
+* :mod:`repro.obs.drift` — PSI-style divergence between calibration and
+  runtime pattern-usage histograms, the bank-swap trigger.
+
+Everything here is host-side and outside the traced computation, so an
+instrumented serve run is bitwise identical to an uninstrumented one — the
+exactness contract gated by ``benchmarks/obs_bench.py``.
+"""
+from repro.obs.drift import DRIFT_THRESHOLD, DriftMonitor, psi, site_drift
+from repro.obs.metrics import (DEFAULT_BUCKETS, TICK_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry, prometheus_many,
+                               snapshot_many)
+from repro.obs.trace import (JsonlSink, ListSink, Tracer, get_tracer,
+                             set_tracer)
+
+__all__ = [
+    "DRIFT_THRESHOLD", "DriftMonitor", "psi", "site_drift",
+    "DEFAULT_BUCKETS", "TICK_BUCKETS", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "prometheus_many", "snapshot_many",
+    "JsonlSink", "ListSink", "Tracer", "get_tracer", "set_tracer",
+]

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from functools import partial
 from typing import Any
 
@@ -51,6 +52,8 @@ import numpy as np
 
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.obs.metrics import DEFAULT_BUCKETS, TICK_BUCKETS, MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serve.page_manager import PageManager
 from repro.serve.sampling import sample
 from repro.serve.scheduler import TelemetryScheduler
@@ -110,9 +113,19 @@ class Engine:
                  mesh=None, paged: bool = False, page_size: int = 16,
                  num_pages: int | None = None,
                  scheduler: TelemetryScheduler | None = None,
-                 record_logits: bool = False):
+                 record_logits: bool = False,
+                 tracer: Tracer | None = None,
+                 wall_time: bool = False):
         """Allocate the decode state (dense slots or page pool) and jit the
-        prefill/decode/splice entry points."""
+        prefill/decode/splice entry points.
+
+        ``tracer`` records the request lifecycle as spans (obs/trace.py);
+        ``wall_time=True`` additionally samples per-token decode wall time
+        into the ``serve_token_latency_ms`` histogram — off by default so
+        the metric snapshot stays deterministic. Both are host-side only:
+        instrumented runs are bitwise identical to uninstrumented ones
+        (gated by ``benchmarks/obs_bench.py``).
+        """
         assert cfg.frontend == "none", "engine serves token-in token-out archs"
         self.cfg = cfg
         self.params = params
@@ -121,7 +134,31 @@ class Engine:
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
         self.mesh = mesh
-        self.scheduler = scheduler or TelemetryScheduler()
+        # Engine-scoped metrics: every run counter lives in this registry,
+        # so a second engine in the same process starts from zero and
+        # reset_telemetry() can zero this engine without touching others.
+        self.metrics = MetricsRegistry(namespace="serve")
+        self.scheduler = scheduler or TelemetryScheduler(metrics=self.metrics)
+        self.tracer = tracer
+        self.wall_time = wall_time
+        self._m_ticks = self.metrics.counter("ticks", "engine iterations")
+        self._m_decoded = self.metrics.counter(
+            "decoded_tokens", "tokens decoded across all slots")
+        self._m_submitted = self.metrics.counter(
+            "requests_submitted", "requests accepted into the queue")
+        self._m_retired = self.metrics.counter(
+            "requests_retired", "requests finished (incl. context_full)")
+        self._m_preempted = self.metrics.counter(
+            "requests_preempted", "pool-dry evictions (re-queued)")
+        self._m_latency_ticks = self.metrics.histogram(
+            "request_latency_ticks",
+            "admit -> retire latency in engine ticks (per slot residency)",
+            buckets=TICK_BUCKETS)
+        self._m_token_ms = self.metrics.histogram(
+            "token_latency_ms",
+            "per-token decode wall latency (wall_time engines only)",
+            buckets=DEFAULT_BUCKETS)
+        self._admit_tick = [0] * batch_slots
         self.record_logits = record_logits
         self.logit_trace: dict[int, list[np.ndarray]] = {}
         # Right-padding is exact only for causal full attention (see module
@@ -151,8 +188,6 @@ class Engine:
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
         self.results: list[Result] = []
-        self.ticks = 0
-        self.decoded_tokens = 0
 
         self._decode = jax.jit(partial(model.decode_step, cfg))
         self._decode_paged = jax.jit(partial(model.decode_step_paged, cfg))
@@ -160,6 +195,27 @@ class Engine:
         self._prefill_padded = jax.jit(partial(model.prefill_padded, cfg))
         self._insert = jax.jit(self._insert_impl)
         self._splice = jax.jit(self._splice_impl)
+
+    @property
+    def ticks(self) -> int:
+        """Engine iterations so far (thin view over ``serve_ticks``)."""
+        return int(self._m_ticks.get())
+
+    @property
+    def decoded_tokens(self) -> int:
+        """Tokens decoded so far (thin view over ``serve_decoded_tokens``)."""
+        return int(self._m_decoded.get())
+
+    def _emit(self, kind: str, **attrs: Any) -> None:
+        """Tracer event carrying the current tick counter (no-op untraced)."""
+        if self.tracer is not None:
+            self.tracer.emit(kind, tick=self.ticks, **attrs)
+
+    def _span(self, kind: str, **attrs: Any):
+        """Tracer span (emit-on-exit) or a null context when untraced."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(kind, tick=self.ticks, **attrs)
 
     def _ctx(self):
         """Mesh context for traced calls: under a mesh the sharding rules
@@ -210,6 +266,8 @@ class Engine:
                 f"max_context - 1 = {self.max_context - 1}; raise "
                 f"max_context or truncate the prompt")
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._emit("submit", rid=req.rid, prompt_len=plen)
 
     # ----------------------------------------------------------------- tick
     def _admit(self) -> None:
@@ -234,12 +292,16 @@ class Engine:
                 self.results.append(
                     Result(req.rid, list(req.prefix), len(req.tokens)))
                 self.scheduler.note("retire_context_full")
+                self._m_retired.inc()
+                self._emit("retire", rid=req.rid, reason="context_full",
+                           tokens=len(req.prefix))
                 continue
             if self.paged:
                 bl = bucket_len(plen, self.max_context)
                 if not self.pm.reserve_prefill(free[0], bl):
                     # Pool dry: stop admitting, put the rest back in order.
                     self.scheduler.note("admit_blocked_pool")
+                    self._emit("admit_blocked", rid=req.rid)
                     picks.insert(0, req)
                     break
             self._admit_one(free.pop(0), req, prompt)
@@ -249,9 +311,12 @@ class Engine:
     def _admit_one(self, slot: int, req: Request, prompt: np.ndarray) -> None:
         prompt = prompt[None, :].astype(np.int32)
         plen = prompt.shape[1]
-        with self._ctx():
+        bl = bucket_len(plen, self.max_context) if self.bucketed else plen
+        self._emit("resume" if req.prefix else "admit", rid=req.rid,
+                   slot=slot, prompt_len=plen, bucket=bl)
+        with self._span("prefill", rid=req.rid, slot=slot, bucket=bl), \
+                self._ctx():
             if self.bucketed:
-                bl = bucket_len(plen, self.max_context)
                 padded = np.zeros((1, bl), np.int32)
                 padded[0, :plen] = prompt[0]
                 logits, new_state = self._prefill_padded(
@@ -279,6 +344,7 @@ class Engine:
         self.budget[slot] = req.max_new_tokens - len(req.prefix)
         self.active[slot] = True
         self.slot_req[slot] = req
+        self._admit_tick[slot] = self.ticks
 
     # ------------------------------------------------------------ preemption
     def _preempt(self, slot: int) -> None:
@@ -288,6 +354,9 @@ class Engine:
         req.prefix = list(req.prefix) + list(self.out_tokens[slot])
         self.queue.insert(0, req)
         self.scheduler.note("requeue_preempted")
+        self._m_preempted.inc()
+        self._emit("preempt", rid=req.rid, slot=slot,
+                   generated=len(self.out_tokens[slot]))
         self.pm.release(slot)
         self.active[slot] = False
         self.slot_req[slot] = None
@@ -322,6 +391,15 @@ class Engine:
                     self.pm.release(slot)
                 self.active[slot] = False
                 self.slot_req[slot] = None
+                self._m_retired.inc()
+                # Latency covers this slot residency (admit -> retire); a
+                # preempted request's earlier residencies were traced as
+                # their own admit/preempt spans.
+                lat = self.ticks - self._admit_tick[slot]
+                self._m_latency_ticks.observe(lat)
+                self._emit("retire", rid=req.rid, slot=slot,
+                           tokens=len(req.prefix) + len(toks),
+                           latency_ticks=lat)
 
     def tick(self) -> bool:
         """One engine iteration; returns False when fully idle."""
@@ -333,6 +411,8 @@ class Engine:
         last = np.array([self.out_tokens[b][-1] if self.active[b] else 0
                          for b in range(self.B)], np.int32)
         pos = jnp.asarray(self.pos.astype(np.int32))
+        n_active = int(self.active.sum())
+        t0 = time.perf_counter() if self.wall_time else 0.0
         with self._ctx():
             if self.paged:
                 logits, self.pools = self._decode_paged(
@@ -354,12 +434,22 @@ class Engine:
                 if self.active[b]:
                     self.logit_trace.setdefault(
                         self.slot_req[b].rid, []).append(logits_np[b])
+        decoded = 0
         for b in range(self.B):
             if self.active[b]:
                 self.out_tokens[b].append(int(nxt[b]))
                 self.pos[b] += 1
-                self.decoded_tokens += 1
-        self.ticks += 1
+                decoded += 1
+        if self.wall_time and decoded:
+            # np.asarray(sample(...)) above synchronised the device, so the
+            # window covers the decode step; one observation per token keeps
+            # the histogram's count equal to decoded_tokens.
+            per_tok_ms = (time.perf_counter() - t0) * 1e3 / decoded
+            for _ in range(decoded):
+                self._m_token_ms.observe(per_tok_ms)
+        self._emit("decode", active=n_active, tokens=decoded)
+        self._m_decoded.inc(decoded)
+        self._m_ticks.inc()
         self._retire()
         return True
 
@@ -373,10 +463,41 @@ class Engine:
                 break
         if self.cfg.phi is not None:
             from repro.kernels import dispatch
+            from repro.obs.drift import DriftMonitor
             dispatch.get_policy().log_report(prefix="serve")
+            # Drift pass over the served sites: publishes per-site
+            # drift_score gauges and the drift_alert counter the future
+            # bank-swap subsystem consumes (docs/observability.md).
+            verdict = DriftMonitor(
+                dispatch.get_policy(),
+                prefix=self.scheduler.config.site_prefix).check()
+            if verdict["alerts"]:
+                from repro.utils import log
+                log.warning("sparsity drift past threshold at %s",
+                            ", ".join(verdict["alerts"]))
         return self.results
 
     # ------------------------------------------------------------ reporting
+    def reset_telemetry(self, include_policy: bool = True) -> None:
+        """Zero every run counter so a fresh run over this engine (or the
+        next engine in this process) reports from scratch.
+
+        Clears the engine-scoped metric registry (and the scheduler's, when
+        the caller wired its own), the logit traces, and — unless
+        ``include_policy=False`` — the process dispatch policy's *runtime*
+        telemetry. The policy's calibration usage registry survives
+        (``reset(keep_usage=True)``): it describes the model, not the run,
+        and wiping it would disable the prefetch usage gate. Regression-
+        tested: two back-to-back identical runs report identical counts.
+        """
+        self.metrics.reset()
+        if self.scheduler.metrics is not self.metrics:
+            self.scheduler.metrics.reset()
+        self.logit_trace.clear()
+        if include_policy:
+            from repro.kernels import dispatch
+            dispatch.get_policy().reset(keep_usage=True)
+
     def phi_report(self) -> dict:
         """Execution-policy telemetry for the traffic served so far:
         per-site dispatch decisions + l2_nnz packer budgets."""

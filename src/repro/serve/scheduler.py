@@ -29,7 +29,11 @@ longest), ties broken toward the youngest request. Victims re-queue at the
 front with their generated prefix (``requeue_preempted``) and resume
 token-identically (tested).
 
-Every decision increments a named counter; ``report()`` feeds
+Every decision increments a named counter — a ``kind``-labelled series of
+the ``scheduler_decisions`` metric in an ``obs.metrics`` registry (the
+engine shares its own engine-scoped registry with the scheduler it
+constructs, so two engines in one process never bleed counts into each
+other). ``report()`` stays the thin backward-compatible dict view; it feeds
 ``benchmarks/serve_bench.py`` and the counts are CI-gated exactly in
 ``BENCH_serve.json`` — a silently flipped scheduling decision is the same
 regression class as a flipped dispatch decision.
@@ -37,6 +41,8 @@ regression class as a flipped dispatch decision.
 from __future__ import annotations
 
 import dataclasses
+
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,16 +64,25 @@ class SchedulerConfig:
 class TelemetryScheduler:
     """Scores queued requests on dispatch-policy telemetry; counts decisions."""
 
-    def __init__(self, config: SchedulerConfig | None = None) -> None:
-        """Start with zeroed decision counters and the given config."""
+    def __init__(self, config: SchedulerConfig | None = None,
+                 metrics: MetricsRegistry | None = None) -> None:
+        """Start with zeroed decision counters and the given config.
+
+        ``metrics`` is the registry the decision counter registers in —
+        the engine passes its own engine-scoped registry; standalone
+        schedulers get a private one."""
         self.config = config or SchedulerConfig()
-        self.counts: dict[str, int] = {}
+        self.metrics = metrics if metrics is not None else \
+            MetricsRegistry(namespace="serve")
+        self._counter = self.metrics.counter(
+            "scheduler_decisions", "admission/eviction decisions by kind",
+            labelnames=("kind",))
 
     def note(self, kind: str, n: int = 1) -> None:
         """Increment decision counter ``kind`` by ``n`` (engine-side events
         — ``admit_blocked_pool``, ``requeue_preempted`` — use this too)."""
         if n:
-            self.counts[kind] = self.counts.get(kind, 0) + n
+            self._counter.inc(n, kind=kind)
 
     # ------------------------------------------------------------ telemetry --
     def snapshot(self) -> dict:
@@ -132,5 +147,6 @@ class TelemetryScheduler:
 
     # ------------------------------------------------------------ reporting --
     def report(self) -> dict[str, int]:
-        """Decision counts accumulated so far (name -> count), sorted."""
-        return dict(sorted(self.counts.items()))
+        """Decision counts accumulated so far (name -> count), sorted — the
+        thin view over the ``serve_scheduler_decisions`` counter."""
+        return {key[0]: int(v) for key, v in self._counter.items()}

@@ -234,6 +234,20 @@ def test_production_tree_lints_clean():
     assert lint_paths(root) == []
 
 
+def test_lint_scope_includes_obs_package():
+    """The default lint walk must cover ``src/repro/obs`` — the obs layer's
+    io_callback-fed metric stores are exactly what PHI-LINT-BARRIER guards
+    (a reader without ``jax.effects_barrier()`` under-counts)."""
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    walked = sorted(p.relative_to(root).as_posix()
+                    for p in (root / "src" / "repro").rglob("*.py"))
+    assert "src/repro/obs/metrics.py" in walked
+    assert "src/repro/obs/drift.py" in walked
+    assert "src/repro/obs/trace.py" in walked
+
+
 def test_vmem_reconstruction_nonzero_for_gated_lowerings():
     """The VMEM cross-check must not pass vacuously: the traced records of
     every byte-model-gated lowering reconstruct a positive working set."""

@@ -23,6 +23,7 @@ DOCS = REPO / "docs"
 # Keep in sync with the ruff D1 paths in .github/workflows/ci.yml.
 DOCSTRING_SCOPE = (
     "src/repro/serve",
+    "src/repro/obs",
     "src/repro/kernels/dispatch.py",
     "src/repro/kernels/ops.py",
     "src/repro/core/patterns.py",

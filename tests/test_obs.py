@@ -1,0 +1,303 @@
+"""Observability layer: tracer, metrics registry, drift monitor, telemetry.
+
+The contracts under test (docs/observability.md):
+
+* the tracer's JSONL stream is deterministic — monotonic ``seq``, sorted
+  keys, no wall-clock fields unless ``wall_time`` is on;
+* the metrics registry is typed (re-registering a name as a different
+  type or label set raises), engine-scoped, and ``reset()`` zeroes series
+  while keeping registrations — so back-to-back runs report identical
+  counts (the satellite-1 regression);
+* the PSI drift monitor alerts on a Zipf-shifted runtime histogram and
+  stays silent on a scaled stationary one, deterministically;
+* ``site_telemetry()`` covers its edge cases: empty policy, zero-match
+  prefix, decisions-but-no-counters sites, multi-shard aggregation.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.obs import (DRIFT_THRESHOLD, DriftMonitor, JsonlSink, ListSink,
+                       MetricsRegistry, Tracer, get_tracer, prometheus_many,
+                       psi, set_tracer, site_drift, snapshot_many)
+
+# ----------------------------------------------------------------- tracer --
+
+
+def test_tracer_seq_monotonic_and_none_attrs_dropped():
+    sink = ListSink()
+    tr = Tracer(sink)
+    tr.emit("a", x=1, skip=None)
+    tr.emit("b", y="z")
+    assert [r["seq"] for r in sink.records] == [0, 1]
+    assert "skip" not in sink.records[0]
+    assert sink.records[0]["kind"] == "a" and sink.records[1]["y"] == "z"
+    assert tr.kind_counts == {"a": 1, "b": 1}
+
+
+def test_tracer_no_wall_clock_unless_enabled():
+    cold, warm = ListSink(), ListSink()
+    Tracer(cold).emit("e")
+    tw = Tracer(warm, wall_time=True)
+    tw.emit("e")
+    with tw.span("s"):
+        pass
+    assert "wall_ms" not in cold.records[0]
+    assert "wall_ms" in warm.records[0]
+    assert "dur_ms" in warm.records[1]
+
+
+def test_tracer_span_emits_on_exit_with_attrs():
+    sink = ListSink()
+    tr = Tracer(sink)
+    with tr.span("prefill", rid=3, slot=0):
+        tr.emit("inner")
+    kinds = [r["kind"] for r in sink.records]
+    assert kinds == ["inner", "prefill"]        # span closes after its body
+    assert sink.records[1]["rid"] == 3
+
+
+def test_jsonl_sink_deterministic_bytes(tmp_path):
+    """Same records -> byte-identical files (sorted keys, no whitespace)."""
+    paths = [tmp_path / "a.jsonl", tmp_path / "b.jsonl"]
+    for p in paths:
+        tr = Tracer(JsonlSink(str(p)))
+        tr.emit("dispatch", site="lm.wq", impl="fused", blocks=[128, 64])
+        tr.emit("decode", tokens=2)
+        tr.close()
+    a, b = (p.read_bytes() for p in paths)
+    assert a == b
+    rec = json.loads(a.splitlines()[0])
+    assert rec["site"] == "lm.wq" and rec["seq"] == 0
+
+
+def test_set_tracer_returns_previous():
+    tr = Tracer(ListSink())
+    prev = set_tracer(tr)
+    try:
+        assert get_tracer() is tr
+    finally:
+        set_tracer(prev)
+    assert get_tracer() is prev
+
+
+# ---------------------------------------------------------------- metrics --
+
+
+def test_registry_counter_labels_and_total():
+    reg = MetricsRegistry("t")
+    c = reg.counter("hits", "h", labelnames=("kind",))
+    c.inc(kind="a")
+    c.inc(2, kind="b")
+    assert c.get(kind="a") == 1 and c.get(kind="b") == 2
+    assert c.total() == 3
+    assert reg.counter("hits", "h", labelnames=("kind",)) is c  # get-or-create
+
+
+def test_registry_type_and_labelset_conflicts_raise():
+    reg = MetricsRegistry("t")
+    reg.counter("x", "d")
+    with pytest.raises(ValueError):
+        reg.gauge("x", "d")
+    reg.counter("y", "d", labelnames=("a",))
+    with pytest.raises(ValueError):
+        reg.counter("y", "d", labelnames=("b",))
+
+
+def test_histogram_percentile_and_edge_validation():
+    reg = MetricsRegistry("t")
+    h = reg.histogram("lat", "l", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (0.5, 1.5, 1.5, 3.0, 7.0, 100.0):
+        h.observe(v)
+    assert h.count() == 6 and h.sum() == pytest.approx(113.5)
+    assert 1.0 <= h.percentile(50) <= 2.0
+    assert h.percentile(100) >= 8.0             # overflow bucket -> top edge
+    with pytest.raises(ValueError):
+        reg.histogram("bad", "b", buckets=(2.0, 1.0))
+
+
+def test_registry_reset_zeroes_but_keeps_registrations():
+    reg = MetricsRegistry("t")
+    c = reg.counter("n", "d")
+    g = reg.gauge("v", "d")
+    h = reg.histogram("lat", "d", buckets=(1.0, 2.0))
+    c.inc(5)
+    g.set(3.0)
+    h.observe(1.5)
+    reg.reset()
+    assert c.total() == 0 and g.get() == 0 and h.count() == 0
+    assert reg.get("n") is c                    # same object, still typed
+    c.inc()
+    assert c.total() == 1
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry("serve")
+    reg.counter("ticks", "engine iterations").inc(3)
+    h = reg.histogram("lat_ms", "latency", buckets=(1.0, 2.0))
+    h.observe(0.5)
+    h.observe(5.0)
+    body = prometheus_many([reg])
+    assert "# HELP serve_ticks engine iterations" in body
+    assert "# TYPE serve_ticks counter" in body
+    assert "serve_ticks 3" in body
+    assert 'serve_lat_ms_bucket{le="1.0"} 1' in body
+    assert 'serve_lat_ms_bucket{le="+Inf"} 2' in body
+    assert "serve_lat_ms_count 2" in body
+
+
+def test_snapshot_many_rejects_namespace_collision():
+    a, b = MetricsRegistry("dup"), MetricsRegistry("dup")
+    a.counter("x", "d")
+    b.counter("x", "d")
+    with pytest.raises(ValueError):
+        snapshot_many([a, b])
+
+
+# ------------------------------------------------------------------ drift --
+
+
+def _zipf_hist(t, q, total, shift, a=1.5):
+    ranks = (np.arange(q) + 1).astype(np.float64)
+    p = 1.0 / ranks ** a
+    p = np.roll(p / p.sum(), shift)
+    hist = np.zeros((t, q + 1), np.int64)
+    hist[:, :q] = np.round(p * total).astype(np.int64)
+    hist[:, q] = max(1, total // 20)
+    return hist
+
+
+def test_psi_zero_for_identical_and_scaled_distributions():
+    h = _zipf_hist(1, 16, 4000, 0)[0]
+    assert psi(h, h) == pytest.approx(0.0, abs=1e-9)
+    assert psi(h, h * 7) == pytest.approx(0.0, abs=1e-9)
+    assert psi(np.zeros(4), h[:4]) == 0.0       # empty side -> no signal
+
+
+def test_site_drift_alerts_on_zipf_shift_not_on_scaling():
+    calib = _zipf_hist(2, 16, 4000, 0)
+    shifted = _zipf_hist(2, 16, 4000, 8)
+    assert site_drift(calib, shifted) > DRIFT_THRESHOLD
+    assert site_drift(calib, calib * 7) < DRIFT_THRESHOLD
+    with pytest.raises(ValueError):
+        site_drift(calib, np.zeros((2, 9), np.int64))  # bin-count mismatch
+
+
+def test_drift_monitor_alert_and_silence_deterministic():
+    """Shifted site alerts, stationary stays silent — and two evaluations
+    of the same state score identically (pure numpy, no clock)."""
+    calib = _zipf_hist(2, 16, 4000, 0)
+    pol = dispatch.PhiExecutionPolicy()
+    pol.register_usage("m.shifted", calib)
+    pol.register_usage("m.stationary", calib)
+    with pol._lock:
+        pol._sites["m.shifted"] = {
+            "executions": 1, "usage_runtime": _zipf_hist(2, 16, 4000, 8)}
+        pol._sites["m.stationary"] = {
+            "executions": 1, "usage_runtime": calib * 7}
+    mon = DriftMonitor(pol, prefix="m.")
+    v1, v2 = mon.check(), mon.check()
+    assert v1["alerts"] == ["m.shifted"]
+    assert v1["scores"] == v2["scores"]
+    alert = pol.metrics.counter("drift_alert", "psi over threshold",
+                                labelnames=("site",))
+    assert alert.get(site="m.shifted") == 2     # one per check()
+    assert alert.get(site="m.stationary") == 0
+
+
+# --------------------------------------------------------- site_telemetry --
+
+
+def test_site_telemetry_empty_policy_and_zero_match_prefix():
+    pol = dispatch.PhiExecutionPolicy()
+    assert pol.site_telemetry() == []
+    pol.register_usage("lm.wq", _zipf_hist(2, 16, 400, 0))
+    assert pol.site_telemetry(prefix="nomatch.") == []
+    assert [r["site"] for r in pol.site_telemetry(prefix="lm.")] == ["lm.wq"]
+
+
+def test_site_telemetry_covers_decision_only_sites():
+    """A site that resolved decisions but never executed (no runtime
+    counters, no calibration usage) must still appear in the view."""
+    pol = dispatch.PhiExecutionPolicy()
+    pol._record_decision(dispatch.Decision(
+        impl="coo", reason="unit", site="lm.ghost",
+        shape=(8, 64, 64, 2, 16), backend="cpu"))
+    rows = {r["site"]: r for r in pol.site_telemetry()}
+    assert "lm.ghost" in rows
+    row = rows["lm.ghost"]
+    assert row["impl"] == "coo" and row["reason"] == "unit"
+    assert row["executions"] == 0 and not row["warm"]
+    assert row["drift_score"] is None
+
+
+def test_site_telemetry_multi_shard_aggregation():
+    """Per-shard callbacks aggregate executions/rows and label the site
+    with the mesh extent they came from."""
+    pol = dispatch.PhiExecutionPolicy()
+    for _ in range(4):                          # one callback per shard
+        pol._record_nnz("lm.sharded", 64, 128, 8, np.array([3, 5]),
+                        shards=4)
+    (row,) = pol.site_telemetry(prefix="lm.sharded")
+    assert row["shards"] == 4
+    assert row["executions"] == 4 and row["warm"]
+    snap = pol.metrics_snapshot()
+    execs = {tuple(s["labels"].items()): s["value"]
+             for s in snap["phi_site_executions"]["series"]}
+    assert execs[(("site", "lm.sharded"),)] == 4
+
+
+def test_policy_reset_keep_usage():
+    pol = dispatch.PhiExecutionPolicy()
+    pol.register_usage("lm.wq", _zipf_hist(2, 16, 400, 0))
+    pol._record_nnz("lm.wq", 64, 128, 8, np.array([3]))
+    pol.reset(keep_usage=True)
+    assert pol.usage_for("lm.wq") is not None
+    assert pol.site_telemetry()[0]["executions"] == 0
+    pol.reset()
+    assert pol.usage_for("lm.wq") is None
+
+
+# ------------------------------------------------ engine reset regression --
+
+
+def test_engine_back_to_back_runs_report_identical_counts():
+    """Satellite-1 regression: engine-scoped metric namespaces mean two
+    identical runs (fresh engine each) report identical serve counts, and
+    ``reset_telemetry()`` rewinds a live engine's registry to zero without
+    losing registrations."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import init_params
+    from repro.models import model
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(model.lm_specs(cfg), jax.random.PRNGKey(0))
+
+    def go():
+        eng = Engine(cfg, params, batch_slots=2, max_context=32,
+                     paged=True, page_size=8)
+        rng = np.random.default_rng(5)
+        for i in range(3):
+            eng.submit(Request(
+                rid=i,
+                tokens=[int(t) for t in rng.integers(3, cfg.vocab, 7)],
+                max_new_tokens=3, temperature=0.0))
+        eng.run()
+        return eng
+
+    a, b = go(), go()
+    assert a.metrics.snapshot() == b.metrics.snapshot()
+    assert a.scheduler.report() == b.scheduler.report()
+    assert a.decoded_tokens == b.decoded_tokens > 0
+
+    b.reset_telemetry(include_policy=False)
+    assert b.decoded_tokens == 0 and b.ticks == 0
+    assert b.scheduler.report() == {}
+    assert b.logit_trace == {}
+    # registrations survive the reset: the same counter objects keep working
+    assert b.metrics.get("decoded_tokens").total() == 0
